@@ -1,0 +1,108 @@
+"""Shared benchmark scaffolding: CPU-sized stand-ins for the paper's
+datasets + solver builders.  Sizes are reduced (laptop-scale) but keep the
+algorithmic regime; every benchmark prints ``name,us_per_call,derived`` CSV
+rows (derived = the paper-figure quantity)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.chicle_paper import CNNConfig, PAPER_LSGD
+from repro.core import (Assignment, ChunkStore, CoCoASolver, LocalSGDSolver,
+                        MicroTaskEmulator, UniTaskEngine)
+from repro.core.nets import cnn_init, cnn_apply
+from repro.data import make_images, make_svm_data
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# CoCoA workload (HIGGS/Criteo stand-in)
+# ---------------------------------------------------------------------------
+
+
+def svm_store(n: int = 16000, f: int = 128, chunk: int = 100,
+              seed: int = 0) -> ChunkStore:
+    x, y = make_svm_data(n, f, seed=seed)
+    return ChunkStore({"x": x, "y": y}, chunk_size=chunk)
+
+
+def run_cocoa(K: int, iters: int, *, policies=(), node_pst=lambda w: 1.0,
+              store: Optional[ChunkStore] = None, balance=False,
+              lam=1e-3, seed=0):
+    store = store or svm_store(seed=seed)
+    a = Assignment(store.n_chunks, K, np.random.default_rng(seed))
+    solver = CoCoASolver(store, lam=lam, seed=seed)
+    eng = UniTaskEngine(store, a, list(policies), node_pst=node_pst,
+                        balance_processing=balance, seed=seed)
+    t0 = time.time()
+    hist = eng.run(iters, lambda s, asg, sh: solver.step(s, asg, sh),
+                   solver.metric)
+    return hist, (time.time() - t0) * 1e6 / iters, solver, eng
+
+
+def run_cocoa_microtasks(k_tasks: int, iters: int, *, nodes_at,
+                         node_pst_pool=lambda i: 1.0, store=None,
+                         lam=1e-3, seed=0):
+    store = store or svm_store(seed=seed)
+    solver = CoCoASolver(store, lam=lam, seed=seed)
+    emu = MicroTaskEmulator(store, k_tasks, nodes_at=nodes_at,
+                            node_pst_pool=node_pst_pool, seed=seed)
+    t0 = time.time()
+    hist = emu.run(iters, lambda s, asg, sh: solver.step(s, asg, sh),
+                   solver.metric)
+    return hist, (time.time() - t0) * 1e6 / iters
+
+
+# ---------------------------------------------------------------------------
+# lSGD workload (CIFAR-10 stand-in)
+# ---------------------------------------------------------------------------
+
+
+def lsgd_setup(n: int = 4000, seed: int = 0):
+    cfg = CNNConfig()
+    xtr, ytr = make_images(n, cfg.image_size, cfg.channels, cfg.num_classes,
+                           seed=seed, noise=1.5)
+    xte, yte = make_images(800, cfg.image_size, cfg.channels, cfg.num_classes,
+                           seed=seed + 1, noise=1.5)
+    return cfg, (xtr, ytr), (xte, yte)
+
+
+def loss_per_sample(logits, yb, reduce=True):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    per = lse - jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+    return per.mean() if reduce else per
+
+
+def run_lsgd(K: int, iters: int, *, data, eval_data, cnn_cfg,
+             policies=(), node_pst=lambda w: 1.0, chunk=50,
+             local_steps=4, lr=5e-3, eval_every=10, seed=0, balance=True):
+    xtr, ytr = data
+    xte, yte = eval_data
+    tc = dataclasses.replace(PAPER_LSGD, local_steps=local_steps,
+                             learning_rate=lr)
+    store = ChunkStore({"x": xtr, "y": ytr}, chunk_size=chunk)
+    a = Assignment(store.n_chunks, K, np.random.default_rng(seed))
+    solver = LocalSGDSolver(cnn_init(cnn_cfg, jax.random.key(seed)), cnn_apply,
+                            loss_per_sample, tc,
+                            eval_data=jnp.asarray(xte),
+                            eval_labels=jnp.asarray(yte), seed=seed)
+    eng = UniTaskEngine(store, a, list(policies), node_pst=node_pst,
+                        balance_processing=balance, seed=seed)
+    dj, lj = jnp.asarray(xtr), jnp.asarray(ytr)
+    t0 = time.time()
+    hist = eng.run(iters,
+                   lambda s, asg, sh: solver.step(s, asg, dj, lj, sh),
+                   solver.metric, eval_every=eval_every)
+    return hist, (time.time() - t0) * 1e6 / iters, solver, eng

@@ -1,0 +1,44 @@
+"""Fig. 1 reproduction: data parallelism vs epochs-to-converge.
+
+(a) lSGD/CNN on the CIFAR-10 stand-in: epochs to reach target test accuracy
+    as the number of workers K (= global batch K*L*H) grows.
+(b) CoCoA/SVM: epochs (iterations) to reach a duality-gap target as the
+    number of partitions K grows.
+
+Claim C1: both curves increase with K.
+"""
+from __future__ import annotations
+
+from repro.core import epochs_to_target
+
+from . import common
+
+
+def main(fast: bool = False) -> None:
+    # --- (b) CoCoA first: cheap and crisp -------------------------------
+    target_gap = 5e-3
+    ks = [2, 4, 8, 16, 32]
+    epochs_b = {}
+    for K in ks:
+        hist, us, _, _ = common.run_cocoa(K, iters=10)
+        ep = epochs_to_target(hist, target_gap, higher_is_better=False)
+        epochs_b[K] = ep
+        common.emit(f"fig1b_cocoa_epochs_to_gap{target_gap}_K{K}", us,
+                    ep if ep is not None else "inf")
+
+    # --- (a) lSGD/CNN ----------------------------------------------------
+    cfg, data, eval_data = common.lsgd_setup(n=3000)
+    target_acc = 0.80
+    ks = [2, 8] if fast else [2, 8, 24]
+    for K in ks:
+        iters = 40 if fast else 90
+        hist, us, _, _ = common.run_lsgd(K, iters, data=data,
+                                         eval_data=eval_data, cnn_cfg=cfg,
+                                         eval_every=5)
+        ep = epochs_to_target(hist, target_acc, higher_is_better=True)
+        common.emit(f"fig1a_lsgd_epochs_to_acc{target_acc}_K{K}", us,
+                    ep if ep is not None else "inf")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh 16x16|2x16x16|all]
+"""
+from __future__ import annotations
+
+import argparse
+
+from .roofline import load_records
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "n/a"
+    return f"{b/2**30:.2f}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="all")
+    ap.add_argument("--tags", default=None,
+                    help="filter by tags field (default: all)")
+    args = ap.parse_args()
+    recs = load_records()
+
+    print("| arch | shape | mesh | kind | variant | params | args GiB | "
+          "temp GiB | compute ms | memory ms | coll ms | bound | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh, tags), r in sorted(recs.items()):
+        if args.mesh != "all" and mesh != args.mesh:
+            continue
+        if args.tags is not None and tags != args.tags:
+            continue
+        if "error" in r:
+            print(f"| {arch} | {shape} | {mesh} | ERROR | | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mm = r["memory"]
+        print(f"| {arch} | {shape} | {mesh} | {r['kind']} | {r['variant']} | "
+              f"{r['n_params']/1e9:.1f}B | {fmt_bytes(mm['argument_bytes'])} | "
+              f"{fmt_bytes(mm['temp_bytes'])} | "
+              f"{rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} | "
+              f"{rf['collective_s']*1e3:.1f} | {rf['bottleneck']} | "
+              f"{rf['useful_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

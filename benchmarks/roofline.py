@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run JSONL records (deliverable g).
+
+Reads results/dryrun_*.jsonl (produced by ``python -m repro.launch.dryrun
+--both-meshes --out ...``) and prints the per-(arch x shape x mesh) three-term
+roofline with the dominant bottleneck and MODEL/HLO flops ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records():
+    recs = {}
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.jsonl"))):
+        with open(fn) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                       r.get("tags", ""))
+                recs[key] = r  # later files win
+    return recs
+
+
+def main(fast: bool = False) -> None:
+    recs = load_records()
+    if not recs:
+        common.emit("roofline_records", 0.0, 0)
+        print("# no dry-run records found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --both-meshes "
+              "--seq-parallel --out results/dryrun_all.jsonl")
+        return
+    n_ok = n_err = 0
+    print("# arch,shape,mesh,kind,compute_ms,memory_ms,collective_ms,"
+          "bottleneck,useful_ratio,temp_GiB")
+    for (arch, shape, mesh, tags), r in sorted(recs.items()):
+        if "error" in r:
+            n_err += 1
+            print(f"# ERROR {arch} {shape} {mesh}: {r['error'][:80]}")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        mm = r["memory"]
+        temp = (mm.get("temp_bytes") or 0) / 2**30
+        print(f"{arch},{shape},{mesh},{r['kind']},"
+              f"{rf['compute_s']*1e3:.2f},{rf['memory_s']*1e3:.2f},"
+              f"{rf['collective_s']*1e3:.2f},{rf['bottleneck']},"
+              f"{rf['useful_ratio']:.3f},{temp:.1f}")
+    common.emit("roofline_records_ok", 0.0, n_ok)
+    common.emit("roofline_records_failed", 0.0, n_err)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]``
+Prints ``name,us_per_call,derived`` CSV rows (derived = the paper-figure
+quantity: epochs-to-target, projected time-to-target, schedule lengths,
+roofline terms, ...).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced configs (CI-speed)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (ablations, fig1_parallelism, fig4_elastic,
+                   fig5_loadbalance, fig6_swimlane, table_baseline, roofline)
+
+    benches = {
+        "table_baseline": table_baseline.main,   # §5.2 / A.1
+        "fig1_parallelism": fig1_parallelism.main,  # Fig 1
+        "fig4_elastic": fig4_elastic.main,       # Fig 4 / 9
+        "fig5_loadbalance": fig5_loadbalance.main,  # Fig 5 / 10
+        "fig6_swimlane": fig6_swimlane.main,     # Fig 6 / 11
+        "ablations": ablations.main,             # §4.4/§4.5 design knobs
+        "roofline": roofline.main,               # deliverable (g)
+    }
+    failed = []
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Quickstart: train a reduced transformer with the Chicle uni-task pipeline
+end-to-end on CPU in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.train import train
+
+if __name__ == "__main__":
+    out = train("smollm-360m", smoke=True, train_steps=30, global_batch=8,
+                seq_len=64, workers=4, lr=5e-3, log_every=5)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0], "loss should decrease"
+    print(f"quickstart OK: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -1,0 +1,89 @@
+"""Elasticity-aware npz checkpointing (no orbax offline).
+
+Saves the model/optimizer pytrees AND the Chicle scheduling state — the
+chunk->worker assignment and per-sample chunk state (e.g. CoCoA alphas) — so
+a restore resumes with the exact same data placement.  Flat key encoding:
+pytree paths joined with '/'.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = prefix + "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, step: int, params: Any,
+                    opt_state: Any = None, *, extra: Optional[Dict] = None,
+                    assignment=None, chunk_state: Optional[Dict] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    arrays = {}
+    arrays.update({f"params/{k}": v for k, v in _flatten(params).items()})
+    if opt_state is not None:
+        arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    if chunk_state:
+        arrays.update({f"chunk_state/{k}": np.asarray(v)
+                       for k, v in chunk_state.items()})
+    meta = {"step": step, "extra": extra or {}}
+    if assignment is not None:
+        meta["assignment"] = [list(map(int, w)) for w in assignment.workers]
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fn, **arrays)
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return fn
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, step: int, params_like: Any,
+                    opt_like: Any = None) -> Tuple[Any, Any, Dict]:
+    """Restore pytrees shaped like the provided templates."""
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fn)
+    with open(os.path.join(path, f"ckpt_{step:08d}.json")) as f:
+        meta = json.load(f)
+
+    def restore(tree, prefix):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for path_, leaf in flat:
+            key = prefix + "/".join(_path_str(p) for p in path_)
+            arr = data[key]
+            assert arr.shape == leaf.shape, f"shape mismatch for {key}"
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(params_like, "params/")
+    opt = restore(opt_like, "opt/") if opt_like is not None else None
+    meta["chunk_state"] = {k.split("/", 1)[1]: data[k]
+                           for k in data.files if k.startswith("chunk_state/")}
+    return params, opt, meta

@@ -1,0 +1,91 @@
+"""Small pure-JAX nets for the paper's own workloads (§5.1).
+
+The paper's DNN: "a CNN with relu activations composed of two convolutional
+layers with max-pooling followed by 3 fully connected layers" trained on
+CIFAR-10 / Fashion-MNIST.  We reproduce it (on synthetic image data) plus an
+MLP used by fast unit tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.chicle_paper import CNNConfig
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_init(cfg: CNNConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 8)
+    c1, c2 = cfg.conv_channels
+    f1, f2 = cfg.fc_sizes
+    side = cfg.image_size // 4  # two 2x2 maxpools
+    flat = side * side * c2
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o)) * math.sqrt(2.0 / i)
+
+    return {
+        "c1": jax.random.normal(ks[0], (3, 3, cfg.channels, c1)) * math.sqrt(2.0 / (9 * cfg.channels)),
+        "b1": jnp.zeros((c1,)),
+        "c2": jax.random.normal(ks[1], (3, 3, c1, c2)) * math.sqrt(2.0 / (9 * c1)),
+        "b2": jnp.zeros((c2,)),
+        "f1": dense(ks[2], flat, f1), "fb1": jnp.zeros((f1,)),
+        "f2": dense(ks[3], f1, f2), "fb2": jnp.zeros((f2,)),
+        "f3": dense(ks[4], f2, cfg.num_classes), "fb3": jnp.zeros((cfg.num_classes,)),
+    }
+
+
+def cnn_apply(params, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, classes)."""
+    h = jax.nn.relu(_conv(x, params["c1"]) + params["b1"])
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, params["c2"]) + params["b2"])
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["f1"] + params["fb1"])
+    h = jax.nn.relu(h @ params["f2"] + params["fb2"])
+    return h @ params["f3"] + params["fb3"]
+
+
+def mlp_init(key: jax.Array, n_features: int, n_classes: int,
+             hidden: Tuple[int, ...] = (64,)) -> Dict[str, jax.Array]:
+    dims = (n_features,) + hidden + (n_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(ks[i], (a, b)) * math.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    n = len(params) // 2
+    h = x
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

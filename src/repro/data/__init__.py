@@ -1,0 +1,15 @@
+from .synthetic import (
+    make_classification,
+    make_images,
+    make_lm_tokens,
+    make_svm_data,
+)
+from .pipeline import ChunkBatchPipeline
+
+__all__ = [
+    "make_classification",
+    "make_images",
+    "make_lm_tokens",
+    "make_svm_data",
+    "ChunkBatchPipeline",
+]

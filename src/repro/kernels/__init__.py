@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- flash_attention: causal/sliding-window attention (VMEM-tiled online softmax)
+- scd: CoCoA local SCD sequential solver (VMEM-resident chunks)
+- chunk_reduce: weighted uni-task update merge (bandwidth-bound reduction)
+
+ops.py holds the jit'd model-layout wrappers; ref.py the pure-jnp oracles.
+The paper itself has no GPU kernels (CPU/RDMA system); these are the
+TPU-native hot spots of THIS framework — see DESIGN.md §6.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,112 @@
+"""Flash attention Pallas TPU kernel (causal + sliding-window).
+
+TPU-native tiling: grid = (batch*q_heads, n_q_blocks, n_k_blocks); the k-block
+axis is the innermost 'arbitrary' dimension so the online-softmax accumulator
+lives in VMEM scratch across k steps.  Block shapes are MXU-aligned (128
+multiples).  GQA is handled without materializing repeated K/V: the k/v
+BlockSpec index_map divides the head index by the group size.
+
+Validated on CPU in interpret mode against ref.py (tests/test_kernels.py);
+on TPU this is the drop-in for models/attention.blocked_attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    d = q_pos - k_pos
+    ok = jnp.ones_like(d, dtype=jnp.bool_)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v)
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(kj == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "group_size", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    group_size: int = 1, interpret: bool = True) -> jax.Array:
+    """q: (BHq, S, hd); k, v: (BHkv, S, hd) with BHq = BHkv * group_size.
+
+    The layout groups q heads with their kv head: q index h maps to kv head
+    h // group_size.  Returns (BHq, S, hd).
+    """
+    BH, S, hd = q.shape
+    assert k.shape[0] * group_size == BH
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    n_q, n_k = S // block_q, S // block_k
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        group_size: int = 1) -> jax.Array:
+    """q: (BHq, S, hd); k, v: (BHkv, S, hd); q head h uses kv head h//group."""
+    BH, S, hd = q.shape
+    if group_size > 1:
+        k = jnp.repeat(k, group_size, axis=0)
+        v = jnp.repeat(v, group_size, axis=0)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    d = pos[:, None] - pos[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def scd_pass_ref(x, y, alpha, w, mask, lam_n, sigma):
+    """Sequential SCD oracle matching kernels/scd.py (per worker)."""
+    K, M, F = x.shape
+
+    def worker(xk, yk, ak, mk, sg):
+        def body(i, carry):
+            v, da = carry
+            xi = xk[i]
+            q = jnp.dot(xi, v)
+            grad = 1.0 - yk[i] * q
+            denom = jnp.maximum(jnp.dot(xi, xi) * sg / lam_n, 1e-12)
+            a_new = jnp.clip(ak[i] + grad / denom, 0.0, 1.0)
+            d = (a_new - ak[i]) * mk[i]
+            v = v + (sg / lam_n) * d * yk[i] * xi
+            da = da.at[i].set(d)
+            return v, da
+
+        return jax.lax.fori_loop(0, M, body, (w, jnp.zeros(M, jnp.float32)))
+
+    v_end, da = jax.vmap(worker)(x, y, alpha, mask, sigma)
+    return v_end, da
+
+
+def weighted_merge_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                      updates.astype(jnp.float32)).astype(updates.dtype)

@@ -1,0 +1,97 @@
+"""SCD (stochastic coordinate descent) Pallas TPU kernel — CoCoA's local
+solver inner loop, the paper's per-sample hot spot.
+
+TPU adaptation of the paper's CPU-cache insight (§4.4: "chunk size can be
+tuned ... e.g. to the CPU cache size"): one grid cell per worker; the
+worker's sample block (M, F) is staged HBM->VMEM by the BlockSpec, and the
+sequential coordinate loop runs entirely from VMEM, updating the local dual
+deltas and the shared direction v in registers/VMEM.  Chunk size should be
+picked so (M, F) + v fits VMEM — same insight, different memory hierarchy.
+
+The coordinate loop is inherently sequential (each update changes v), so the
+kernel parallelizes across workers (grid) and vectorizes the F-dim inner
+products (VPU lanes), not across samples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scd_kernel(x_ref, y_ref, alpha_ref, w_ref, mask_ref, meta_ref,
+                v_out_ref, da_out_ref, *, n_steps: int):
+    """One worker's sequential SCD pass.
+
+    x_ref: (1, M, F) samples; y_ref/alpha_ref/mask_ref: (1, M);
+    w_ref: (F,) shared model; meta_ref: (2,) = [lam*n, sigma_k].
+    Outputs: v_out (F,) local direction end-state, da_out (1, M) dual deltas.
+    """
+    lam_n = meta_ref[0, 0]
+    sigma = meta_ref[0, 1]
+    x = x_ref[0]  # (M, F) VMEM-resident chunk
+    y = y_ref[0]
+    alpha = alpha_ref[0]
+    mask = mask_ref[0]
+
+    sq = jnp.sum(x * x, axis=1)  # (M,)
+
+    def body(i, carry):
+        v, da = carry
+        x_i = x[i]
+        q = jnp.sum(x_i * v)
+        grad = 1.0 - y[i] * q
+        denom = jnp.maximum(sq[i] * sigma / lam_n, 1e-12)
+        a_new = jnp.clip(alpha[i] + grad / denom, 0.0, 1.0)
+        d = (a_new - alpha[i]) * mask[i]
+        v = v + (sigma / lam_n) * d * y[i] * x_i
+        da = da.at[i].set(d)
+        return v, da
+
+    v0 = w_ref[...]
+    da0 = jnp.zeros_like(alpha)
+    v_end, da = jax.lax.fori_loop(0, n_steps, body, (v0, da0))
+    v_out_ref[0] = v_end
+    da_out_ref[0] = da
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scd_pass(x: jax.Array, y: jax.Array, alpha: jax.Array, w: jax.Array,
+             mask: jax.Array, lam_n: jax.Array, sigma: jax.Array,
+             *, interpret: bool = True):
+    """Per-worker SCD pass.
+
+    x: (K, M, F); y, alpha, mask: (K, M); w: (F,); lam_n scalar;
+    sigma: (K,) per-worker safe scaling.
+    Returns (v_end (K, F), da (K, M)); the merge is
+      w += sum_k (v_end_k - w) / sigma_k   (additive CoCoA+ update).
+    """
+    K, M, F = x.shape
+    meta = jnp.stack([jnp.broadcast_to(lam_n, (K,)), sigma], axis=1)  # (K, 2)
+
+    kernel = functools.partial(_scd_kernel, n_steps=M)
+    v_end, da = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, M, F), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, M), lambda k: (k, 0)),
+            pl.BlockSpec((1, M), lambda k: (k, 0)),
+            pl.BlockSpec((F,), lambda k: (0,)),
+            pl.BlockSpec((1, M), lambda k: (k, 0)),
+            pl.BlockSpec((1, 2), lambda k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, F), lambda k: (k, 0)),
+            pl.BlockSpec((1, M), lambda k: (k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, F), jnp.float32),
+            jax.ShapeDtypeStruct((K, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y, alpha, w, mask, meta)
+    return v_end, da

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute  = HLO_FLOPs / (chips * peak)
+memory   = HLO_bytes / (chips * hbm_bw)
+collective = collective_bytes / (chips * link_bw)
+
+collective_bytes is parsed from the post-SPMD HLO text (per-device shapes):
+we sum the result-type bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.  Collectives
+inside `while` bodies (the layer scan) execute once per trip; XLA's text
+doesn't carry trip counts, so the caller passes the scan length and we scale
+body-resident collectives by it (documented approximation, EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e-class hardware constants (per brief)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, *, loop_trip_count: int = 1
+                      ) -> CollectiveStats:
+    """Sum per-device collective result bytes from post-SPMD HLO text."""
+    bytes_by_kind: Dict[str, int] = {}
+    count_by_kind: Dict[str, int] = {}
+
+    # split into computations: header line "name {" ... closing "}"
+    comp_name = None
+    comp_is_body = False
+    body_names: set = set()
+    # first pass: find while-body computation names
+    for m in re.finditer(r"while\(", hlo_text):
+        pass  # body detection via naming convention below
+
+    for line in hlo_text.splitlines():
+        header = re.match(r"^%?([\w\.\-]+)\s*(\([^)]*\))?\s*->.*\{\s*$", line) \
+            or re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+        if header:
+            comp_name = header.group(1)
+            comp_is_body = ("body" in comp_name) or ("while" in comp_name)
+            continue
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match: %x = TYPE kind( ... ) — require word boundary + '('
+            if re.search(rf"\)?\s{kind}(?:-start|-done)?\(", stripped) or \
+               re.search(rf"=\s*\S+\s+{kind}(?:-start)?\(", stripped):
+                if f" {kind}-done(" in stripped:
+                    continue  # counted at -start
+                eq = stripped.split("=", 1)
+                if len(eq) != 2:
+                    continue
+                rhs = eq[1]
+                type_part = rhs.split(kind)[0]
+                b = _type_bytes(type_part)
+                mult = loop_trip_count if comp_is_body else 1
+                bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b * mult
+                count_by_kind[kind] = count_by_kind.get(kind, 0) + mult
+                break
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # total HLO flops (per device)
+    bytes_accessed: float  # per device
+    collective_bytes: float  # per device
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, chips: int,
+                   model_flops: float) -> Roofline:
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    per_chip_model = model_flops / chips
+    useful = per_chip_model / hlo_flops if hlo_flops else 0.0
+    return Roofline(
+        flops=hlo_flops, bytes_accessed=hlo_bytes,
+        collective_bytes=collective_bytes, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops, useful_ratio=useful)
+
+
+def model_flops_for(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (N = active params)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * toks

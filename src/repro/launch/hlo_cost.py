@@ -1,0 +1,260 @@
+"""Text-based HLO cost model with EXACT while-loop trip counts.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each while body ONCE,
+which undercounts scanned-layer models by ~n_layers.  The post-optimization
+HLO text, however, carries ``backend_config={"known_trip_count":{"n":...}}``
+on every while op, so we reconstruct true totals ourselves:
+
+  flops  — every ``dot``: 2 * numel(result) * prod(contracting dims)
+           (+ convolutions approximately); multiplied along the call graph
+           by while trip counts.
+  bytes  — per instruction: result bytes + operand bytes (fusions counted
+           as atomic instructions, matching XLA's fusion-aware accounting);
+           same trip-count multipliers.
+  collectives — result bytes of all-gather/all-reduce/reduce-scatter/
+           all-to-all/collective-permute, by kind, same multipliers.
+
+All sizes are PER DEVICE (the text is the post-SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*)?\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{\s*"n"\s*:\s*"?(\d+)')
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[int], int]:
+    """-> (total bytes, dims of first array, elem bytes of first array)."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    first_eb = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = dims
+            first_eb = _DTYPE_BYTES[dt]
+    return total, first_dims or [], first_eb
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0  # TPU-fusion estimate
+    bytes_full: float = 0.0  # every instruction (CPU-lowered reality)
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_n: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # children: (computation name, flops multiplier, bytes multiplier)
+    children: List[Tuple[str, int, int]] = dataclasses.field(default_factory=list)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "custom-call", "copy-start", "copy-done",
+}
+
+# Layout/dtype-only ops: real traffic in the CPU-lowered module but fused
+# into neighbors by the TPU compiler.  Excluded from the TPU-fusion bytes
+# estimate (kept in bytes_full).
+_LAYOUT_OPS = {
+    "convert", "transpose", "copy", "broadcast", "reshape", "slice",
+    "concatenate", "reverse", "pad", "iota", "compare", "select", "and",
+    "or", "not", "add", "subtract", "multiply", "divide", "maximum",
+    "minimum", "exponential", "log", "negate", "abs", "rsqrt", "sqrt",
+    "power", "tanh", "floor", "ceil", "sign", "clamp", "exponential-minus-one",
+}
+
+
+def parse_module(text: str, flash_seq: int = 0
+                 ) -> Tuple[Dict[str, CompCost], Optional[str]]:
+    """flash_seq > 0 enables the FLASH-CREDIT mode: instructions whose
+    output (or any operand) is a rank>=3 tensor with trailing dim ==
+    flash_seq are the attention score/probs interior — on TPU they live in
+    the Pallas flash kernel's VMEM (kernels/flash_attention.py) and never
+    touch HBM, so their BYTES are excluded (flops kept; the MXU still does
+    the work).  q/k/v/out tensors (trailing dim = head_dim) stay counted —
+    they are the kernel's real HBM traffic."""
+    comps: Dict[str, CompCost] = {}
+    entry: Optional[str] = None
+    fusion_comps: set = set()
+    cur: Optional[CompCost] = None
+    cur_name = None
+    symbols: Dict[str, str] = {}
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{"):
+            hm = _HEADER_RE.match(line)
+            if hm:
+                cur_name = hm.group(1)
+                cur = comps.setdefault(cur_name, CompCost())
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+                symbols = {}
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, type_str, op = im.group(1), im.group(2), im.group(3)
+        symbols[name] = type_str
+        out_bytes, out_dims, _ = _shape_info(type_str)
+
+        # call-graph edges
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            if bm:
+                cur.children.append((bm.group(1), trip, trip))
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if cm:
+                cur.children.append((cm.group(1), trip, trip))
+            continue
+        if op in ("call", "async-start"):
+            tm2 = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if tm2:
+                cur.children.append((tm2.group(1), 1, 1))
+        if op == "conditional":
+            for b in re.findall(r"branch_computations=\{([^}]*)\}", line):
+                for nm in _OPERAND_RE.findall(b):
+                    cur.children.append((nm, 1, 1))
+        if op == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-]+)", line)
+            if fm:
+                fusion_comps.add(fm.group(1))
+                # flops inside fusions still counted; bytes NOT (the fusion
+                # instruction itself is the atomic memory access)
+                cur.children.append((fm.group(1), 1, 0))
+
+        # collectives
+        for kind in _COLLECTIVES:
+            if op.startswith(kind):
+                if op.endswith("-done"):
+                    break
+                cur.coll[kind] = cur.coll.get(kind, 0.0) + out_bytes
+                cur.coll_n[kind] = cur.coll_n.get(kind, 0) + 1
+                break
+
+        # flops
+        if op == "dot":
+            cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            ops = _OPERAND_RE.findall(line[im.end():])
+            lhs_shape = symbols.get(ops[0], "") if ops else ""
+            _, lhs_dims, _ = _shape_info(lhs_shape)
+            contract = 1
+            if cm2 and lhs_dims:
+                for d in cm2.group(1).split(","):
+                    if d:
+                        contract *= lhs_dims[int(d)]
+            numel = 1
+            for d in out_dims:
+                numel *= d
+            cur.flops += 2.0 * numel * contract
+        elif op == "convolution":
+            # approx: 2 * out_numel * kernel_numel_per_output
+            ops = _OPERAND_RE.findall(line[im.end():])
+            k_bytes, k_dims, keb = _shape_info(symbols.get(ops[1], "")) \
+                if len(ops) > 1 else (0, [], 1)
+            numel = 1
+            for d in out_dims:
+                numel *= d
+            kn = 1
+            for d in k_dims[:-1]:
+                kn *= d
+            cur.flops += 2.0 * numel * kn
+
+        # bytes
+        if op not in _SKIP_BYTES_OPS:
+            b = out_bytes
+            is_flash_interior = (flash_seq and len(out_dims) >= 3
+                                 and out_dims[-1] == flash_seq)
+            tail = line[im.end():]
+            tail = tail.split(", calls=")[0].split(", metadata=")[0]
+            for opn in _OPERAND_RE.findall(tail.split("), ")[0]):
+                ob, odims, _ = _shape_info(symbols.get(opn, ""))
+                b += ob
+                if flash_seq and len(odims) >= 3 and odims[-1] == flash_seq:
+                    is_flash_interior = True
+            cur.bytes_full += b
+            if op not in _LAYOUT_OPS and not is_flash_interior:
+                cur.bytes += b
+
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float  # TPU-fusion estimate
+    bytes_full: float  # every CPU-lowered instruction
+    coll: Dict[str, float]
+    coll_n: Dict[str, int]
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze(text: str, flash_seq: int = 0) -> HloCost:
+    comps, entry = parse_module(text, flash_seq=flash_seq)
+    if entry is None:
+        return HloCost(0.0, 0.0, 0.0, {}, {})
+    memo: Dict[str, HloCost] = {}
+
+    def walk(name: str, depth=0) -> HloCost:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return HloCost(0.0, 0.0, 0.0, {}, {})
+        memo[name] = HloCost(0.0, 0.0, 0.0, {}, {})  # break cycles
+        fl, by, byf = c.flops, c.bytes, c.bytes_full
+        coll = dict(c.coll)
+        coll_n = dict(c.coll_n)
+        for child, mult, bmult in c.children:
+            sub = walk(child, depth + 1)
+            fl += mult * sub.flops
+            by += bmult * sub.bytes
+            byf += bmult * sub.bytes_full
+            for k, v in sub.coll.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for k, v in sub.coll_n.items():
+                coll_n[k] = coll_n.get(k, 0) + mult * v
+        out = HloCost(fl, by, byf, coll, coll_n)
+        memo[name] = out
+        return out
+
+    return walk(entry)

@@ -1,0 +1,295 @@
+"""Top-level model API: init / specs / loss / prefill / decode for every family.
+
+All entry points are pure functions of (cfg, params, ...) so they jit/pjit
+cleanly and can be lowered with ShapeDtypeStructs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..sharding import AxisRules
+from . import transformer as tfm
+from .layers import ParamDef, cross_entropy, init_tree, rms_norm, sds_tree, spec_tree
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    nb = tfm.n_blocks(cfg)
+    stack = lambda defs: jax.tree.map(  # noqa: E731
+        lambda d: d.stacked(nb), defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("tensor", "fsdp"),
+                          init="small"),
+        "final_ln": ParamDef((cfg.d_model,), (None,), init="ones"),
+    }
+    if cfg.family == "audio":
+        defs["blocks"] = jax.tree.map(
+            lambda d: d.stacked(cfg.num_layers),
+            tfm.block_defs(cfg, "xdec"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        enc = jax.tree.map(lambda d: d.stacked(cfg.encoder_layers),
+                           tfm.block_defs(cfg, "dense"),
+                           is_leaf=lambda x: isinstance(x, ParamDef))
+        defs["encoder"] = {"blocks": enc,
+                           "final_ln": ParamDef((cfg.d_model,), (None,), init="ones")}
+    else:
+        defs["blocks"] = stack(tfm.block_defs(cfg))
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
+    return init_tree(param_defs(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def param_specs(cfg: ModelConfig, rules: AxisRules) -> Any:
+    return spec_tree(param_defs(cfg), rules)
+
+
+def param_sds(cfg: ModelConfig) -> Any:
+    return sds_tree(param_defs(cfg), jnp.dtype(cfg.dtype))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    leaves = jax.tree.leaves(param_defs(cfg),
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def _block_type(cfg: ModelConfig) -> str:
+    return "xdec" if cfg.family == "audio" else cfg.family
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_ln"])
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+
+def _encoder_forward(cfg, enc_params, frames, rules, remat):
+    """Whisper encoder over stub frame embeddings (B, T, D), bidirectional."""
+    x = frames
+
+    def body(x, bp):
+        x, _, _ = tfm.block_apply(cfg, bp, x, None, block_type="dense",
+                                  causal=False, rules=rules)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc_params["blocks"])
+    return rms_norm(x, enc_params["final_ln"])
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
+            memory: Optional[jax.Array] = None, rules: AxisRules,
+            window: Optional[int] = None, remat: bool = True,
+            return_cache: bool = False, q_block: int = 512):
+    """Full-sequence forward.  tokens: (B, S).
+
+    memory: stub embeddings for vlm (patches) / audio (frames).
+    Returns (logits, aux_loss) or (logits, aux_loss, cache) if return_cache.
+    """
+    B, S = tokens.shape
+    bt = _block_type(cfg)
+    win = cfg.sliding_window if window is None else window
+    x = _embed(cfg, params, tokens)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family == "audio":
+        memory = _encoder_forward(cfg, params["encoder"], memory, rules, remat)
+
+    dummy_cache = None
+    if return_cache:
+        shapes = tfm.block_cache_shapes(
+            cfg, B, S, bt, cross_len=memory.shape[1] if memory is not None else 0)
+        dummy_cache = {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+    from ..sharding import constrain_fwd_only
+
+    def body(x, xs):
+        bp, cache = xs
+        x, new_cache, aux = tfm.block_apply(
+            cfg, bp, x, positions, block_type=bt, window=win, cache=cache,
+            memory=memory, rules=rules, q_block=q_block)
+        # primal-only: shrinks the saved residual stack (seq-parallel) without
+        # pinning the cotangent layout (see sharding.constrain_fwd_only)
+        if rules is not None:
+            x = constrain_fwd_only(x, rules.sharding("batch", "seq", None))
+        return x, (new_cache, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    nb = tfm.n_blocks(cfg)
+    if return_cache:
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), dummy_cache)
+        x, (cache, auxs) = jax.lax.scan(body, x, (params["blocks"], caches))
+    else:
+        def body_nc(x, bp):
+            x, (_, aux) = body(x, (bp, None))
+            return x, aux
+        x, auxs = jax.lax.scan(body_nc, x, params["blocks"])
+        cache = None
+
+    logits = _logits(cfg, params, x)
+    aux = jnp.sum(auxs) if auxs is not None else jnp.float32(0.0)
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
+            rules: AxisRules, remat: bool = True, q_block: int = 512,
+            total_weight: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chicle-weighted LM loss.
+
+    batch: tokens (B,S) int32, labels (B,S) int32, weights (B,) float32 —
+    the per-example weights carry the uni-task chunk weighting |D_k|/|D̂|
+    (Stich 2018): grad(loss) == the weighted merge of per-worker updates.
+
+    total_weight: pass the FULL global-batch weight sum when this call sees
+    only a microbatch (gradient accumulation) so microbatch grads sum to the
+    exact full-batch gradient.
+    """
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          memory=batch.get("memory"), rules=rules, remat=remat,
+                          q_block=q_block)
+    ce = cross_entropy(logits, batch["labels"])  # (B, S)
+    w = batch["weights"].astype(jnp.float32)
+    per_ex = jnp.mean(ce, axis=-1)
+    total_w = (jnp.maximum(jnp.sum(w), 1e-9) if total_weight is None
+               else total_weight)
+    loss = jnp.sum(per_ex * w) / total_w
+    metrics = {"loss": loss, "aux_loss": aux}
+    return loss + AUX_LOSS_COEF * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Caches / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int, *,
+               cross_len: int = 0) -> Dict[str, Any]:
+    bt = _block_type(cfg)
+    nb = tfm.n_blocks(cfg)
+    shapes = tfm.block_cache_shapes(cfg, B, cache_len, bt, cross_len=cross_len)
+    blocks = {k: jnp.zeros((nb,) + s, d) for k, (s, d) in shapes.items()}
+    cache: Dict[str, Any] = {"blocks": blocks}
+    if bt != "ssm":
+        cache["k_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+    return cache
+
+
+def cache_sds(cfg: ModelConfig, B: int, cache_len: int, *,
+              cross_len: int = 0) -> Dict[str, Any]:
+    bt = _block_type(cfg)
+    nb = tfm.n_blocks(cfg)
+    shapes = tfm.block_cache_shapes(cfg, B, cache_len, bt, cross_len=cross_len)
+    blocks = {k: jax.ShapeDtypeStruct((nb,) + s, d) for k, (s, d) in shapes.items()}
+    cache: Dict[str, Any] = {"blocks": blocks}
+    if bt != "ssm":
+        cache["k_pos"] = jax.ShapeDtypeStruct((cache_len,), jnp.int32)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, rules: AxisRules) -> Dict[str, Any]:
+    bt = _block_type(cfg)
+    specs: Dict[str, Any] = {"blocks": tfm.cache_specs_for(cfg, rules, bt)}
+    if bt != "ssm":
+        from jax.sharding import PartitionSpec as P
+        specs["k_pos"] = P(None)
+    return specs
+
+
+def decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
+                pos: jax.Array, *, rules: AxisRules,
+                window: Optional[int] = None,
+                ring: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, 1, V), new cache).
+    """
+    bt = _block_type(cfg)
+    win = cfg.sliding_window if window is None else window
+    x = _embed(cfg, params, token)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", None, None))
+
+    if bt != "ssm":
+        k_pos = cache["k_pos"]
+        W = k_pos.shape[0]
+        idx = pos % W if ring else jnp.minimum(pos, W - 1)
+        k_pos = k_pos.at[idx].set(pos)
+    else:
+        k_pos = None
+
+    def body(x, xs):
+        bp, bc = xs
+        x, new_bc = tfm.block_decode(cfg, bp, x, pos, k_pos, bc, block_type=bt,
+                                     window=win, ring=ring, rules=rules)
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    logits = _logits(cfg, params, x)
+    new_cache = dict(cache, blocks=new_blocks)
+    if k_pos is not None:
+        new_cache["k_pos"] = k_pos
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array, *,
+            memory: Optional[jax.Array] = None, rules: AxisRules,
+            window: Optional[int] = None, remat: bool = True,
+            q_block: int = 512, cache_len: Optional[int] = None):
+    """Prefill: forward over the prompt, returning last-token logits + a
+    decode cache.  cache_len > S allocates headroom for subsequent decode
+    steps (k/v seq dims zero-padded, empty slots marked -1 in k_pos)."""
+    logits, aux, blocks = forward(cfg, params, tokens, memory=memory,
+                                  rules=rules, window=window, remat=remat,
+                                  return_cache=True, q_block=q_block)
+    B, S = tokens.shape
+    bt = _block_type(cfg)
+    cache_len = cache_len or S
+    if cache_len > S and bt != "ssm":
+        pad = cache_len - S
+        seq_axis = 3 if bt == "vlm" else 2  # stacked (nb, [k-1,] B, S, kv, hd)
+        def pad_kv(name, arr):
+            if name in ("k", "v"):
+                widths = [(0, 0)] * arr.ndim
+                widths[seq_axis] = (0, pad)
+                return jnp.pad(arr, widths)
+            return arr
+        blocks = {k: pad_kv(k, v) for k, v in blocks.items()}
+    cache: Dict[str, Any] = {"blocks": blocks}
+    if bt != "ssm":
+        cache["k_pos"] = jnp.concatenate([
+            jnp.arange(S, dtype=jnp.int32),
+            jnp.full((max(cache_len - S, 0),), -1, jnp.int32)])
+    return logits[:, -1:], cache

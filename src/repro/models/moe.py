@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: grouped top-k routing with capacity buffers.
+
+GShard/MaxText-style TPU formulation: tokens are reshaped to
+(G groups, T_g tokens, D) with G sharded over the batch ("data") axes, so
+every dispatch tensor keeps a sharded leading dim and nothing rematerializes
+at global size.  Within a group, top-k assignments get slots in per-expert
+capacity buffers via a cumsum; overflow tokens are DROPPED (static shapes).
+
+Expert weights shard "expert"->model when E divides the model axis
+(expert parallelism: arctic 128, jamba 16); otherwise d_ff->model
+(tensor-parallel experts: grok 8).  The (G->data, E->model) buffer layout
+makes the dispatch gather/scatter lower to the all-to-all-ish collectives
+we examine in the roofline.
+
+Returns a Switch-style load-balance aux loss for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import AxisRules
+from .layers import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    expert_parallel = e % 16 == 0  # big-E archs shard the expert dim
+    if expert_parallel:
+        axes3 = ("tensor", "fsdp", None)  # (E, D, F): E -> model
+        axes3b = ("tensor", None, "fsdp")  # (E, F, D)
+    else:
+        axes3 = (None, "fsdp", "tensor")  # (E, D, F): F -> model
+        axes3b = (None, "tensor", "fsdp")
+    defs = {
+        "router": ParamDef((d, e), ("fsdp", None), init="small"),
+        "gate": ParamDef((e, d, f), axes3),
+        "up": ParamDef((e, d, f), axes3),
+        "down": ParamDef((e, f, d), axes3b),
+    }
+    if cfg.moe_dense_residual:
+        fr = cfg.dense_residual_ff or f
+        defs["res_gate"] = ParamDef((d, fr), ("fsdp", "tensor"))
+        defs["res_up"] = ParamDef((d, fr), ("fsdp", "tensor"))
+        defs["res_down"] = ParamDef((fr, d), ("tensor", "fsdp"))
+    return defs
+
+
+def _constrain(x: jax.Array, rules: AxisRules, *axes) -> jax.Array:
+    if rules is None:
+        return x
+    from jax.sharding import NamedSharding
+    spec = rules.guard(rules.spec(*axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def _n_groups(rules: AxisRules, B: int) -> int:
+    g = rules.axis_size(rules.batch) if rules is not None else 1
+    while g > 1 and B % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(cfg: ModelConfig, p, x: jax.Array, rules: AxisRules,
+            *, capacity_factor: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    if rules is not None:
+        # per-step expert weight grads must be BORN sharded (see pin_grad)
+        from jax.sharding import NamedSharding
+        from ..sharding import pin_grad
+        ep = E % 16 == 0
+        axes3 = ("tensor", "fsdp", None) if ep else (None, "fsdp", "tensor")
+        axes3b = ("tensor", None, "fsdp") if ep else (None, "tensor", "fsdp")
+        from ..sharding import use_weight
+        p = dict(p)
+        for k_, ax in (("gate", axes3), ("up", axes3), ("down", axes3b)):
+            spec = rules.guard(rules.spec(*ax), p[k_].shape)
+            p[k_] = pin_grad(p[k_], NamedSharding(rules.mesh, spec))
+            p[k_] = use_weight(p[k_], rules, *ax)
+        for k_, ax in (("res_gate", ("fsdp", "tensor")),
+                       ("res_up", ("fsdp", "tensor")),
+                       ("res_down", ("tensor", "fsdp"))):
+            if k_ in p:
+                p[k_] = use_weight(p[k_], rules, *ax)
+    G = _n_groups(rules, B)
+    Tg = (B * S) // G
+    xg = _constrain(x.reshape(G, Tg, D), rules, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux load-balance loss (per group, then averaged)
+    density = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                       axis=1)  # (G, E)
+    mean_prob = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(density * mean_prob, axis=-1))
+
+    cap_f = capacity_factor or cfg.moe_capacity_factor
+    cap = max(int(cap_f * K * Tg / E), 4)
+
+    def dispatch_group(xt, te, tw):
+        """xt: (Tg, D); te/tw: (Tg, K) -> (out (Tg, D))."""
+        flat_e = te.reshape(-1)  # (Tg*K,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = slot < cap
+        tok_idx = jnp.repeat(jnp.arange(Tg), K)
+        e_idx = jnp.where(keep, flat_e, E)  # dummy row E for drops
+        c_idx = jnp.where(keep, slot, 0)
+        buf = jnp.full((E + 1, cap), -1, jnp.int32)
+        buf = buf.at[e_idx, c_idx].set(tok_idx)[:E]  # (E, cap)
+        gathered = jnp.take(xt, buf.clip(0), axis=0)  # (E, cap, D)
+        gathered = jnp.where((buf >= 0)[..., None], gathered, 0)
+        wbuf = jnp.zeros((E + 1, cap), jnp.float32)
+        wbuf = wbuf.at[e_idx, c_idx].add(
+            jnp.where(keep, tw.reshape(-1), 0.0))
+        return buf, gathered, wbuf[:E]
+
+    buf, gathered, wbuf = jax.vmap(dispatch_group)(xg, top_e, top_w)
+    gathered = _constrain(gathered, rules, "batch", "expert", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gathered, p["gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", gathered, p["up"])
+    eo = jnp.einsum("gecf,efd->gecd", h, p["down"])  # (G, E, cap, D)
+    eo = eo * wbuf[..., None].astype(eo.dtype)
+
+    def combine_group(eo_g, buf_g):
+        out = jnp.zeros((Tg, D), eo_g.dtype)
+        flat = eo_g.reshape(E * cap, D) * (buf_g.reshape(-1, 1) >= 0)
+        return out.at[buf_g.clip(0).reshape(-1)].add(flat)
+
+    out = _constrain(jax.vmap(combine_group)(eo, buf), rules,
+                     "batch", None, None)
+
+    if cfg.moe_dense_residual:
+        h = jax.nn.silu(jnp.einsum("gtd,df->gtf", xg, p["res_gate"]))
+        h = h * jnp.einsum("gtd,df->gtf", xg, p["res_up"])
+        out = out + jnp.einsum("gtf,fd->gtd", h, p["res_down"]).astype(out.dtype)
+
+    return out.reshape(B, S, D).astype(x.dtype), aux

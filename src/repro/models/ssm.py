@@ -1,0 +1,281 @@
+"""SSM blocks: Mamba (selective scan) and RWKV6 "Finch" (data-dependent decay).
+
+TPU adaptation: the CUDA selective-scan kernel has no TPU analogue; the
+TPU-native formulation is the *chunked* scan — sequence is cut into chunks,
+states are carried by a lax.scan over chunks, and within a chunk the recurrence
+is evaluated in parallel via cumulative products (log-space decays).  This
+bounds the materialized (chunk, d_inner, state) tensors to VMEM-friendly sizes
+instead of the (S, d_inner, state) monster the naive parallel form needs.
+
+Both train/prefill (chunked) and decode (O(1) state update) paths are here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamDef, rms_norm
+
+MAMBA_CHUNK = 64
+RWKV_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    dtr = max(16, d // 16)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("fsdp", "tensor")),
+        "conv_w": ParamDef((cfg.ssm_conv_width, di), (None, "tensor"), init="small"),
+        "conv_b": ParamDef((di,), ("tensor",), init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * n), ("tensor", None)),
+        "dt_proj": ParamDef((dtr, di), (None, "tensor")),
+        "dt_bias": ParamDef((di,), ("tensor",), init="zeros"),
+        "a_log": ParamDef((di, n), ("tensor", None), init="small"),
+        "d_skip": ParamDef((di,), ("tensor",), init="ones"),
+        "out_proj": ParamDef((di, d), ("tensor", "fsdp")),
+    }
+
+
+def mamba_scan_chunked(cfg: ModelConfig, p, x_conv: jax.Array,
+                       h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan.  x_conv: (B, S, di); h0: (B, di, n).
+
+    ALL heavy per-timestep tensors (decay, input term — (B, c, di, n)) are
+    computed INSIDE the chunk body so only one chunk's worth is ever live;
+    the scan saves just the (B, c, di) x_conv slice per step for backward.
+    Returns (y (B, S, di), h_final).
+    """
+    B, S, di = x_conv.shape
+    n = cfg.ssm_state_dim
+    dtr = p["dt_proj"].shape[0]
+    c = min(MAMBA_CHUNK, S)
+    assert S % c == 0, f"seq {S} not divisible by mamba chunk {c}"
+    nc = S // c
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n)
+
+    xc = x_conv.reshape(B, nc, c, di)
+
+    @jax.checkpoint
+    def body(h, x_c):
+        # x_c: (B, c, di)
+        xdbl = jnp.einsum("bcd,de->bce", x_c, p["x_proj"])
+        dt = jax.nn.softplus(
+            jnp.einsum("bcr,rd->bcd", xdbl[..., :dtr], p["dt_proj"])
+            + p["dt_bias"])
+        b_t = xdbl[..., dtr:dtr + n].astype(jnp.float32)  # (B, c, n)
+        ct_c = xdbl[..., dtr + n:]  # (B, c, n)
+        ld_c = dt.astype(jnp.float32)[..., None] * a  # (B, c, di, n) <= 0
+        u_c = (dt * x_c).astype(jnp.float32)[..., None] * b_t[..., None, :]
+        # h_t = exp(cum_t) * h + sum_{i<=t} exp(cum_t - cum_i) * u_i
+        # (cum inclusive; exp(cum_t - cum_i) via exp(cum_t)*exp(-cum_i),
+        #  clipped in log space for stability).
+        cum = jnp.cumsum(ld_c, axis=1)
+        inv = jnp.exp(jnp.clip(-cum, -60.0, 60.0))
+        acc = jnp.cumsum(u_c * inv, axis=1)
+        h_t = jnp.exp(cum) * (h[:, None] + acc)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_t, ct_c.astype(jnp.float32))
+        return h_t[:, -1], y_c
+
+    h_fin, ys = jax.lax.scan(body, h0.astype(jnp.float32),
+                             jnp.moveaxis(xc, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + x_conv.astype(jnp.float32) * p["d_skip"]
+    return y.astype(x_conv.dtype), h_fin
+
+
+def _constrain_di(t: jax.Array, rules) -> jax.Array:
+    """Pin (B, S, di) tensors to (batch, None, tensor) so the scan internals
+    stay d_inner-sharded instead of inheriting sequence sharding."""
+    if rules is None:
+        return t
+    from jax.sharding import NamedSharding
+    spec = rules.guard(rules.spec("batch", None, "tensor"), t.shape)
+    return jax.lax.with_sharding_constraint(t, NamedSharding(rules.mesh, spec))
+
+
+def mamba_forward(cfg: ModelConfig, p, x: jax.Array,
+                  state: Tuple[jax.Array, jax.Array] | None = None,
+                  rules=None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full mamba mixer. x: (B, S, D). state: (conv_state (B, w-1, di), h (B, di, n)).
+
+    Returns (out (B, S, D), new_state).
+    """
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    w = cfg.ssm_conv_width
+    n = cfg.ssm_state_dim
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = _constrain_di(xi, rules)
+    z = _constrain_di(z, rules)
+
+    if state is None:
+        conv_state = jnp.zeros((B, w - 1, di), x.dtype)
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+    else:
+        conv_state, h0 = state
+
+    # causal depthwise conv over seq as w shifted-adds — never materializes
+    # the (B, S, di, w) window tensor
+    xi_pad = jnp.concatenate([conv_state, xi], axis=1)  # (B, S+w-1, di)
+    x_conv = jnp.zeros_like(xi)
+    for i in range(w):
+        x_conv = x_conv + xi_pad[:, i:i + S] * p["conv_w"][i]
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)
+                         + p["conv_b"]).astype(x.dtype)
+
+    y, h_fin = mamba_scan_chunked(cfg, p, x_conv, h0)
+    out = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", out, p["out_proj"])
+    new_conv_state = xi_pad[:, S:]  # last w-1 inputs
+    return out, (new_conv_state, h_fin)
+
+
+def mamba_decode(cfg: ModelConfig, p, x: jax.Array,
+                 state: Tuple[jax.Array, jax.Array]
+                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token mamba step. x: (B, 1, D)."""
+    return mamba_forward(cfg, p, x, state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    lora = max(32, d // 32)
+    return {
+        "mix_r": ParamDef((d,), (None,), init="small"),
+        "mix_k": ParamDef((d,), (None,), init="small"),
+        "mix_v": ParamDef((d,), (None,), init="small"),
+        "mix_w": ParamDef((d,), (None,), init="small"),
+        "mix_g": ParamDef((d,), (None,), init="small"),
+        "wr": ParamDef((d, h, hd), ("fsdp", "tensor", None)),
+        "wk": ParamDef((d, h, hd), ("fsdp", "tensor", None)),
+        "wv": ParamDef((d, h, hd), ("fsdp", "tensor", None)),
+        "wg": ParamDef((d, h, hd), ("fsdp", "tensor", None)),
+        "wo": ParamDef((h, hd, d), ("tensor", None, "fsdp")),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": ParamDef((h, hd), ("tensor", None), init="small"),
+        "w_lora_a": ParamDef((d, lora), ("fsdp", None), init="small"),
+        "w_lora_b": ParamDef((lora, h, hd), (None, "tensor", None), init="small"),
+        "bonus_u": ParamDef((h, hd), ("tensor", None), init="small"),
+        "ln_x": ParamDef((d,), (None,), init="ones"),
+    }
+
+
+def rwkv_ffn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": ParamDef((d,), (None,), init="small"),
+        "wk": ParamDef((d, f), ("fsdp", "tensor")),
+        "wv": ParamDef((f, d), ("tensor", "fsdp")),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B, S, D); prev: (B, 1, D) last token of previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x: jax.Array, shift: jax.Array,
+                  state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV6 time mix.  x: (B,S,D); shift: (B,1,D); state: (B,H,hd,hd) fp32.
+
+    Returns (out, new_shift, new_state).
+    """
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    xs = _token_shift(x, shift)
+
+    def mixed(mu):
+        return x + (xs - x) * mu
+
+    r = jnp.einsum("bsd,dhe->bshe", mixed(p["mix_r"]), p["wr"])
+    k = jnp.einsum("bsd,dhe->bshe", mixed(p["mix_k"]), p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", mixed(p["mix_v"]), p["wv"])
+    g = jnp.einsum("bsd,dhe->bshe", mixed(p["mix_g"]), p["wg"])
+
+    xw = mixed(p["mix_w"])
+    dd = jnp.einsum("bsl,lhe->bshe", jnp.tanh(
+        jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])), p["w_lora_b"])
+    log_w = -jnp.exp(jnp.clip(p["w0"] + dd, -8.0, 8.0).astype(jnp.float32))  # (B,S,H,hd) <=0
+
+    out, new_state = rwkv_wkv_chunked(r, k, v, log_w, p["bonus_u"], state)
+    out = rms_norm(out.reshape(B, S, D), p["ln_x"]).astype(x.dtype)
+    out = out * jax.nn.silu(g.reshape(B, S, D)).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out.reshape(B, S, H, hd), p["wo"])
+    return out.astype(x.dtype), x[:, -1:], new_state
+
+
+def rwkv_wkv_chunked(r, k, v, log_w, u, state):
+    """Chunked WKV with per-(head,channel) data-dependent decay.
+
+    r,k,v: (B,S,H,hd); log_w: (B,S,H,hd) (decay of the KEY channel);
+    u: (H,hd) bonus for the current token; state: (B,H,hd,hd) fp32 maps
+    key-channel -> value-channel.  Returns (out (B,S,H,hd), new_state).
+    """
+    B, S, H, hd = r.shape
+    c = min(RWKV_CHUNK, S)
+    assert S % c == 0, f"seq {S} not divisible by rwkv chunk {c}"
+    nc = S // c
+
+    rf = r.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, nc, c, H, hd)
+    lw = log_w.reshape(B, nc, c, H, hd)
+
+    def body(s, xs):
+        r_c, k_c, v_c, lw_c = xs  # (B, c, H, hd)
+        cum = jnp.cumsum(lw_c, axis=1)  # (B, c, H, hd) decay up to & incl. t
+        # inter-chunk: out_t += (r_t * exp(cum_{t-1})) @ s   (decay BEFORE t)
+        cum_excl = cum - lw_c
+        r_dec = r_c * jnp.exp(cum_excl)
+        inter = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
+        # intra-chunk: pair (t, i<t): decay exp(cum_{t-1} - cum_i)
+        k_dec = k_c * jnp.exp(jnp.clip(-cum, -60.0, 60.0))
+        att = jnp.einsum("bchk,bihk->bchi", r_dec, k_dec)  # (B,c,H,c_i)
+        mask = jnp.tril(jnp.ones((c, c), jnp.float32), -1)  # strictly lower
+        att = att * mask[None, :, None, :]
+        intra = jnp.einsum("bchi,bihv->bchv", att, v_c)
+        # bonus: current token via u
+        cur = jnp.einsum("bchk,bchk->bch", r_c, k_c * u[None, None])
+        cur_out = cur[..., None] * v_c
+        out_c = inter + intra + cur_out
+        # state update: s' = exp(cum_last) * s + sum_i exp(cum_last - cum_i) k_i v_i
+        k_for_state = k_c * jnp.exp(jnp.clip(cum[:, -1:] - cum, -60.0, 60.0))
+        s_new = jnp.exp(cum[:, -1])[..., None] * s + jnp.einsum(
+            "bchk,bchv->bhkv", k_for_state, v_c)
+        return s_new, out_c
+
+    s_fin, outs = jax.lax.scan(
+        body, state.astype(jnp.float32),
+        (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+         jnp.moveaxis(vf, 1, 0), jnp.moveaxis(lw, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+    return out, s_fin
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x: jax.Array,
+                     shift: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xs = _token_shift(x, shift)
+    xk = x + (xs - x) * p["mix_k"]
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    return jnp.einsum("bsf,fd->bsd", h, p["wv"]), x[:, -1:]

@@ -1,0 +1,23 @@
+from .optimizers import (
+    OptState,
+    adamw,
+    apply_updates,
+    init_opt_state,
+    opt_specs,
+    opt_state_sds,
+    sgdm,
+)
+from .schedule import constant_lr, cosine_lr, warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "init_opt_state",
+    "opt_state_sds",
+    "sgdm",
+    "apply_updates",
+    "opt_specs",
+    "constant_lr",
+    "cosine_lr",
+    "warmup_cosine",
+]

@@ -1,0 +1,89 @@
+"""Pure-JAX optimizers (no optax offline).
+
+Default is SGD+momentum — the paper's optimizer for lSGD/mSGD, and the
+memory-correct choice for the 300-500B archs on v5e (fp32 momentum only).
+AdamW is provided for the <=4B archs.  Optimizer state inherits the param
+sharding (ZeRO-style for free under FSDP rules).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # momentum / first moment (fp32)
+    nu: Optional[Any]  # second moment (adamw only)
+
+
+def init_opt_state(params, *, optimizer: str = "sgdm") -> OptState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    nu = None
+    if optimizer == "adamw":
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def opt_state_sds(param_sds, *, optimizer: str = "sgdm") -> OptState:
+    mu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                      param_sds)
+    nu = None
+    if optimizer == "adamw":
+        nu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                          param_sds)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mu, nu=nu)
+
+
+def opt_specs(param_specs, *, optimizer: str = "sgdm") -> OptState:
+    from jax.sharding import PartitionSpec as P
+    mu = jax.tree.map(lambda s: s, param_specs)
+    nu = jax.tree.map(lambda s: s, param_specs) if optimizer == "adamw" else None
+    return OptState(step=P(), mu=mu, nu=nu)
+
+
+def sgdm(grads, state: OptState, *, lr, momentum: float = 0.9,
+         weight_decay: float = 0.0, params=None) -> Tuple[Any, OptState]:
+    """Returns (updates, new_state); updates are ADDED to params."""
+    def upd(m, g, p):
+        g32 = g.astype(jnp.float32)
+        if weight_decay and p is not None:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        return momentum * m + g32
+
+    mu = jax.tree.map(upd, state.mu, grads,
+                      params if params is not None
+                      else jax.tree.map(lambda x: None, grads))
+    updates = jax.tree.map(lambda m: (-lr * m), mu)
+    return updates, OptState(state.step + 1, mu, None)
+
+
+def adamw(grads, state: OptState, *, lr, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0, params=None
+          ) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+    nh = jax.tree.map(lambda n: n / (1 - b2 ** t), nu)
+
+    def upd(m, n, p):
+        u = -lr * m / (jnp.sqrt(n) + eps)
+        if weight_decay and p is not None:
+            u = u - lr * weight_decay * p.astype(jnp.float32)
+        return u
+
+    updates = jax.tree.map(upd, mh, nh,
+                           params if params is not None
+                           else jax.tree.map(lambda x: None, grads))
+    return updates, OptState(step, mu, nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

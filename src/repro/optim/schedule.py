@@ -1,0 +1,33 @@
+"""Learning-rate schedules, including the paper's sqrt(K) elastic scaling."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant_lr(base: float):
+    return lambda step: jnp.float32(base)
+
+
+def cosine_lr(base: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return jnp.float32(base) * (final_frac + (1 - final_frac)
+                                    * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(base: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_lr(base, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        warm = jnp.float32(base) * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn
+
+
+def elastic_sqrt_k(base: float, k: int):
+    """alpha' = alpha * sqrt(K) — the paper's elastic LR rule (§5.1)."""
+    return base * math.sqrt(k)

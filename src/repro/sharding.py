@@ -1,0 +1,194 @@
+"""Logical-axis sharding rules: map model-level axis names onto mesh axes.
+
+Meshes (launch/mesh.py):
+  single-pod:  ("data", "model")            = (16, 16)
+  multi-pod:   ("pod", "data", "model")     = (2, 16, 16)
+  smoke/CPU:   ("data",)                    = (n_devices,)
+
+Logical axes used by the models:
+  batch   -> ("pod", "data")   (also the Chicle uni-task worker axis)
+  fsdp    -> ("pod", "data")   weight sharding on the d_model-ish dim (ZeRO-3)
+  tensor  -> "model"           heads / d_ff / vocab / expert-ffn
+  expert  -> "model"           expert dim when divisible (expert parallelism)
+  seq     -> None by default; "model" under sequence-parallelism (perf knob)
+
+GSPMD pads uneven dims (e.g. 15 heads over 16-way model axis), so rules do not
+need divisibility checks for the tensor axis; for fsdp we check divisibility
+and back off to replication to avoid pathological padding of tiny dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AxisRules:
+    """Resolve logical axis names to mesh axes present in the current mesh."""
+
+    def __init__(self, mesh: Mesh, *, seq_parallel: bool = False,
+                 fsdp: bool = True, inference_2d: bool = False):
+        """inference_2d: decode-time regime — ACTIVATIONS replicate over the
+        data axes (decode activations are tiny) while weights keep their 2D
+        (data x model) sharding, so every matmul is a local partial + a
+        micro all-reduce instead of per-step whole-model weight all-gathers.
+        KV caches keep batch sharding via the 'cache_batch' logical axis."""
+        self.mesh = mesh
+        self.axis_names = tuple(mesh.axis_names)
+        self.seq_parallel = seq_parallel
+        self.fsdp_enabled = fsdp
+        self.inference_2d = inference_2d
+
+    def _have(self, *names: str) -> Tuple[str, ...]:
+        return tuple(n for n in names if n in self.axis_names)
+
+    # --- logical axes -------------------------------------------------
+    @property
+    def batch(self):
+        if self.inference_2d:
+            return None
+        ax = self._have("pod", "data")
+        return ax if ax else None
+
+    @property
+    def cache_batch(self):
+        ax = self._have("pod", "data")
+        return ax if ax else None
+
+    @property
+    def fsdp(self):
+        if not self.fsdp_enabled:
+            return None
+        ax = self._have("pod", "data")
+        return ax if ax else None
+
+    @property
+    def tensor(self):
+        return "model" if "model" in self.axis_names else None
+
+    @property
+    def seq(self):
+        if self.seq_parallel and "model" in self.axis_names:
+            return "model"
+        return None
+
+    def axis_size(self, logical) -> int:
+        if logical is None:
+            return 1
+        names = (logical,) if isinstance(logical, str) else logical
+        n = 1
+        for name in names:
+            n *= self.mesh.shape[name]
+        return n
+
+    # --- spec builders -------------------------------------------------
+    def spec(self, *axes) -> P:
+        """Build a PartitionSpec from logical axis names (or None)."""
+        resolved = []
+        for a in axes:
+            if a is None:
+                resolved.append(None)
+            elif a == "batch":
+                resolved.append(self.batch)
+            elif a == "cache_batch":
+                resolved.append(self.cache_batch)
+            elif a == "fsdp":
+                resolved.append(self.fsdp)
+            elif a == "tensor":
+                resolved.append(self.tensor)
+            elif a == "seq":
+                resolved.append(self.seq)
+            elif a == "expert":
+                resolved.append(self.tensor)
+            else:
+                raise ValueError(f"unknown logical axis {a!r}")
+        return P(*resolved)
+
+    def fsdp_spec(self, *axes, dim_sizes=None) -> P:
+        """Like spec() but drops any mapping whose dim is not divisible by
+        the resolved mesh-axis size (jit input shardings require exact
+        divisibility; e.g. whisper's vocab 51865 cannot shard 16 ways)."""
+        spec = self.spec(*axes)
+        if dim_sizes is None:
+            return spec
+        return self.guard(spec, tuple(dim_sizes))
+
+    def guard(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Drop spec entries whose dim size is not divisible by the shards."""
+        fixed = []
+        for ax, sz in zip(tuple(spec) + (None,) * (len(shape) - len(spec)), shape):
+            n = self.axis_size(ax)
+            fixed.append(ax if (n > 1 and sz % n == 0) or n == 1 else None)
+            if n == 1:
+                fixed[-1] = None
+        return P(*fixed)
+
+    def sharding(self, *axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+
+def use_weight(w, rules: Optional[AxisRules], *axes):
+    """FSDP weight-at-use: constrain the weight to its spec with 'fsdp'
+    dropped (tensor sharding kept) right before the einsum, forcing GSPMD to
+    ALL-GATHER the (small) weight over the data axes instead of ALL-REDUCING
+    the (large) activation partial-sums — the classic FSDP pattern.
+    Skipped under inference_2d, where activations are tiny and the partial-
+    sum all-reduce is the right call."""
+    if rules is None or not rules.fsdp_enabled or rules.inference_2d:
+        return w
+    axes = tuple(None if a == "fsdp" else a for a in axes)
+    spec = rules.guard(rules.spec(*axes), w.shape)
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(w, NamedSharding(rules.mesh, spec))
+
+
+def constrain(x, rules: AxisRules, *axes):
+    """with_sharding_constraint by logical axis names."""
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*axes))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def constrain_fwd_only(x, sharding):
+    """Sharding constraint on the PRIMAL only: the saved forward value (e.g.
+    the scan residual stack) is forced to the given sharding, while the
+    cotangent flows unconstrained so GSPMD may pick backward layouts freely.
+
+    Motivation: pinning the block-boundary residual to sequence-parallel
+    shrinks the per-layer saved stack 16x, but pinning the COTANGENT to the
+    same spec makes the FSDP weight-grad dots gather the global batch
+    (three-way axis conflict); see DESIGN.md 'sequence parallelism'.
+    """
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def _cfo_fwd(x, sharding):
+    return jax.lax.with_sharding_constraint(x, sharding), None
+
+
+def _cfo_bwd(sharding, res, g):
+    return (g,)
+
+
+constrain_fwd_only.defvjp(_cfo_fwd, _cfo_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pin_grad(x, sharding):
+    """Identity on the primal; constrains the COTANGENT to `sharding` at its
+    production site.  Used on large weights inside scanned blocks so their
+    per-step grads are born sharded (GSPMD otherwise stacks them replicated
+    — 48GiB/step for jamba's experts)."""
+    return x
+
+
+def _pg_fwd(x, sharding):
+    return x, None
+
+
+def _pg_bwd(sharding, res, g):
+    return (jax.lax.with_sharding_constraint(g, sharding),)
+
+
+pin_grad.defvjp(_pg_fwd, _pg_bwd)

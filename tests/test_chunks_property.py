@@ -1,0 +1,61 @@
+"""Hypothesis property tests on the chunk/assignment invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Assignment, ChunkStore
+from repro.data import make_svm_data
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_chunks=st.integers(2, 60),
+    n_workers=st.integers(1, 8),
+    moves=st.integers(0, 30),
+    seed=st.integers(0, 5),
+)
+def test_assignment_partition_invariant(n_chunks, n_workers, moves, seed):
+    """Chunks are always a partition: every chunk on exactly one worker,
+    regardless of any legal sequence of moves / scale events."""
+    rng = np.random.default_rng(seed)
+    a = Assignment(n_chunks, n_workers, rng)
+    for _ in range(moves):
+        op = rng.integers(0, 4)
+        if op == 0 and a.n_workers >= 2:
+            src, dst = rng.choice(a.n_workers, 2, replace=False)
+            a.move_n(1, int(src), int(dst), rng)
+        elif op == 1:
+            a.add_worker()
+        elif op == 2 and a.n_workers >= 2:
+            a.remove_worker(int(rng.integers(0, a.n_workers)), rng)
+        else:
+            a.rebalance_even(rng)
+        flat = sorted(c for w in a.workers for c in w)
+        assert flat == list(range(n_chunks))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 500),
+    chunk=st.integers(1, 64),
+)
+def test_chunkstore_covers_all_samples(n, chunk):
+    x, y = make_svm_data(max(n, 10), 4)
+    x, y = x[:n], y[:n]
+    store = ChunkStore({"x": x, "y": y}, chunk_size=chunk)
+    ids = np.concatenate([store.chunk_sample_ids(c)
+                          for c in range(store.n_chunks)])
+    assert sorted(ids.tolist()) == list(range(n))
+    assert sum(store.chunk_len(c) for c in range(store.n_chunks)) == n
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), k=st.integers(1, 6))
+def test_rebalance_even_is_even(seed, k):
+    rng = np.random.default_rng(seed)
+    a = Assignment(37, k, rng)
+    # unbalance
+    for w in range(1, a.n_workers):
+        a.move_n(len(a.chunks_of(w)) - 1, w, 0, rng)
+    a.rebalance_even(rng)
+    counts = a.counts()
+    assert counts.max() - counts.min() <= 1

@@ -1,0 +1,154 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+from repro.kernels import chunk_reduce, scd
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, S, KV, G, hd, window, causal, dtype)
+    (2, 128, 2, 2, 64, 0, True, jnp.float32),
+    (1, 256, 1, 4, 32, 0, True, jnp.float32),
+    (2, 128, 3, 1, 64, 32, True, jnp.float32),
+    (1, 128, 2, 1, 64, 0, False, jnp.float32),
+    (1, 128, 2, 2, 64, 64, True, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_allclose(case):
+    B, S, KV, G, hd, win, causal, dtype = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B * KV * G, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B * KV, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B * KV, S, hd), jnp.float32).astype(dtype)
+    out = fa.flash_attention(q, k, v, causal=causal, window=win,
+                             block_q=64, block_k=64, group_size=G,
+                             interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=win,
+                                   group_size=G)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    hd=st.sampled_from([32, 64]),
+    window=st.sampled_from([0, 32, 64]),
+    bq=st.sampled_from([32, 64]),
+)
+def test_flash_attention_hypothesis(bh, s_blocks, hd, window, bq):
+    S = 64 * s_blocks
+    ks = jax.random.split(jax.random.key(42), 3)
+    q = jax.random.normal(ks[0], (bh, S, hd))
+    k = jax.random.normal(ks[1], (bh, S, hd))
+    v = jax.random.normal(ks[2], (bh, S, hd))
+    out = fa.flash_attention(q, k, v, causal=True, window=window,
+                             block_q=bq, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_model_layout_wrapper():
+    B, S, KV, G, hd = 2, 128, 2, 3, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=True, group_size=G)
+    want = want.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SCD
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    m=st.sampled_from([16, 64]),
+    f=st.sampled_from([8, 32]),
+    masked=st.integers(0, 5),
+)
+def test_scd_hypothesis(k, m, f, masked):
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (k, m, f)) * 0.3
+    y = jnp.sign(jax.random.normal(ks[1], (k, m)))
+    alpha = jax.random.uniform(ks[2], (k, m))
+    w = jax.random.normal(ks[3], (f,)) * 0.1
+    mask = jnp.ones((k, m)).at[:, m - masked:].set(0.0) if masked else jnp.ones((k, m))
+    lam_n = jnp.float32(10.0)
+    sigma = jnp.full((k,), float(k))
+    v1, da1 = scd.scd_pass(x, y, alpha, w, mask, lam_n, sigma, interpret=True)
+    v2, da2 = ref.scd_pass_ref(x, y, alpha, w, mask, lam_n, sigma)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(da1), np.asarray(da2), rtol=1e-5, atol=1e-5)
+
+
+def test_scd_masked_samples_untouched():
+    K, M, F = 2, 32, 16
+    ks = jax.random.split(jax.random.key(4), 3)
+    x = jax.random.normal(ks[0], (K, M, F))
+    y = jnp.sign(jax.random.normal(ks[1], (K, M)))
+    alpha = jnp.zeros((K, M))
+    w = jnp.zeros((F,))
+    mask = jnp.zeros((K, M)).at[:, :8].set(1.0)
+    _, da = scd.scd_pass(x, y, alpha, w, mask, jnp.float32(5.0),
+                         jnp.full((K,), 2.0), interpret=True)
+    assert np.all(np.asarray(da)[:, 8:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# chunk reduce (weighted merge)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    n=st.sampled_from([7, 128, 2048, 5001]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_weighted_merge_hypothesis(k, n, dtype):
+    ks = jax.random.split(jax.random.key(5), 2)
+    u = jax.random.normal(ks[0], (k, n)).astype(dtype)
+    w = jax.random.uniform(ks[1], (k,))
+    out = chunk_reduce.weighted_merge(u, w, block_n=512, interpret=True)
+    want = ref.weighted_merge_ref(u, w)
+    tol = 3e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_merge_pytree_matches_manual():
+    tree = {"a": jnp.arange(24.0).reshape(4, 2, 3),
+            "b": jnp.ones((4, 5))}
+    w = jnp.array([0.1, 0.2, 0.3, 0.4])
+    out = ops.merge_pytree(tree, w)
+    want_a = jnp.einsum("k,kij->ij", w, tree["a"])
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(want_a),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(jnp.ones((5,))),
+                               rtol=1e-6)
