@@ -1,0 +1,77 @@
+"""Serving hot-path benchmark: open-loop continuous batching on the smoke
+config, emitting ONE JSON perf record (tokens/s, p50/p99 TTFT/TPOT) so
+future PRs can track the serving path.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core import ElasticScalingPolicy, ScaleEvent
+from repro.serve import ServeEngine, poisson_arrivals, synthetic_requests
+
+
+def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
+        capacity: int = 8, cache_len: int = 64, elastic: bool = True,
+        seed: int = 0) -> dict:
+    cfg = smoke_variant(get_config(arch))
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(requests, rate, rng=rng)
+    reqs = synthetic_requests(requests, vocab_size=cfg.vocab_size,
+                              arrivals=arrivals, prompt_len=(8, 24),
+                              max_new_tokens=(6, 14), rng=rng)
+    policies = []
+    if elastic:
+        policies.append(ElasticScalingPolicy(
+            [ScaleEvent(0, 1), ScaleEvent(10, 2), ScaleEvent(20, 1)]))
+    engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
+                         prefill_bucket=16, n_workers=1, policies=policies,
+                         seed=seed)
+    summary = engine.run(reqs).summarize()
+    ticks = engine.metrics.ticks
+    decode = np.array([t.decode_s for t in ticks if t.decode_s > 0])
+    return {
+        "bench": "serve_bench",
+        "arch": arch,
+        "requests": requests,
+        "rate_req_s": rate,
+        "capacity": capacity,
+        "elastic": elastic,
+        "tokens_per_s": summary["tokens_per_s"],
+        "ttft_p50_s": summary["ttft_p50_s"],
+        "ttft_p99_s": summary["ttft_p99_s"],
+        "tpot_p50_s": summary["tpot_p50_s"],
+        "tpot_p99_s": summary["tpot_p99_s"],
+        "decode_step_p50_s": float(np.percentile(decode, 50)) if len(decode) else None,
+        "occupancy_mean": summary["occupancy_mean"],
+        "requests_finished": summary["requests_finished"],
+        "scale_events": summary["scale_events"],
+        "wall_s": summary["wall_s"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=30.0)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--no-elastic", action="store_true")
+    ap.add_argument("--out", default=None, help="append record to this file")
+    args = ap.parse_args()
+    rec = run(args.arch, requests=args.requests, rate=args.rate,
+              capacity=args.capacity, elastic=not args.no_elastic)
+    line = json.dumps(rec)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Single-command CI gate: tier-1 pytest + a 10-request elastic serve smoke.
+#   ./scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serve smoke (10 requests, elastic k: 1 -> 2 -> 1) =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 10 --seed 0
+
+echo "smoke OK"

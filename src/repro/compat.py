@@ -1,0 +1,87 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern mesh API (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``); the installed
+JAX (0.4.x) predates all three.  Every mesh construction / activation in
+the codebase goes through this module so the rest of the tree can be
+written against the new API unconditionally.
+
+All our meshes use Auto axis types (GSPMD-propagated sharding), which is
+exactly the 0.4.x default — dropping the ``axis_types`` argument on old
+versions is semantics-preserving.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+try:  # JAX >= 0.6: real axis-type enum
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAVE_AXIS_TYPE = True
+except ImportError:  # 0.4.x: placeholder with the same member names
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    _HAVE_AXIS_TYPE = False
+
+
+def auto_axes(n: int) -> Tuple["AxisType", ...]:
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices: Optional[Sequence] = None,
+              axis_types: Optional[Tuple] = None) -> Mesh:
+    """``jax.make_mesh`` that tolerates old signatures without axis_types."""
+    if _HAVE_AXIS_TYPE:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                                 axis_types=axis_types or auto_axes(len(axis_names)))
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), devices=devices)
+
+
+def mesh_from_devices(devices: Sequence, axis_names: Sequence[str],
+                      *, axis_types: Optional[Tuple] = None) -> Mesh:
+    """Mesh over an explicit device array (elastic subsets, etc.)."""
+    arr = np.asarray(devices)
+    if _HAVE_AXIS_TYPE:
+        try:
+            return Mesh(arr, tuple(axis_names),
+                        axis_types=axis_types or auto_axes(len(axis_names)))
+        except TypeError:
+            pass
+    return Mesh(arr, tuple(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x);
+    check_vma maps onto the old API's check_rep."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` when available,
+    the legacy ``with mesh:`` global otherwise)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)  # type: ignore[attr-defined]
+
+    @contextlib.contextmanager
+    def _legacy():
+        with mesh:
+            yield mesh
+    return _legacy()

@@ -18,6 +18,16 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+# Default generator for scheduler mutations when the caller does not thread
+# an engine RNG through.  Module-level so successive default calls draw
+# DIFFERENT picks (a fresh default_rng(0) per call made every invocation
+# pick the same chunks, defeating the shuffle-on-move policies).
+_default_rng = np.random.default_rng(0)
+
+
+def default_rng() -> np.random.Generator:
+    return _default_rng
+
 
 class ChunkStore:
     """Training data + per-sample state, partitioned into fixed-size chunks."""
@@ -100,7 +110,7 @@ class Assignment:
                rng: Optional[np.random.Generator] = None) -> int:
         """Move up to n randomly-picked chunks src -> dst; returns moved count."""
         self._check()
-        rng = rng or np.random.default_rng(0)
+        rng = rng or _default_rng
         n = min(n, len(self.workers[src]))
         picked = rng.choice(self.workers[src], size=n, replace=False)
         for cid in picked:
@@ -120,7 +130,7 @@ class Assignment:
         chunks = self.workers.pop(w)
         if not self.workers:
             raise RuntimeError("cannot remove the last worker")
-        rng = rng or np.random.default_rng(0)
+        rng = rng or _default_rng
         order = rng.permutation(len(chunks))
         for i, j in enumerate(order):
             self.workers[i % len(self.workers)].append(chunks[j])
@@ -129,7 +139,7 @@ class Assignment:
         """Even out chunk counts (used after scale events; the runtime-aware
         balancing lives in policies.RebalancePolicy)."""
         self._check()
-        rng = rng or np.random.default_rng(0)
+        rng = rng or _default_rng
         while True:
             counts = self.counts()
             hi, lo = int(np.argmax(counts)), int(np.argmin(counts))

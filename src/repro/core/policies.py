@@ -11,6 +11,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import chunks
 from .chunks import Assignment, ChunkStore
 
 
@@ -38,7 +39,7 @@ class ElasticScalingPolicy(Policy):
 
     def __init__(self, schedule: Sequence[ScaleEvent], rng=None):
         self.schedule = sorted(schedule, key=lambda e: e.at_time)
-        self.rng = rng or np.random.default_rng(1)
+        self.rng = rng  # None -> engine.rng at decision time
 
     def target_workers(self, t: float) -> Optional[int]:
         n = None
@@ -52,6 +53,8 @@ class ElasticScalingPolicy(Policy):
         if tgt is None or tgt == engine.assignment.n_workers:
             return
         a = engine.assignment
+        rng = self.rng if self.rng is not None else \
+            getattr(engine, "rng", None) or chunks.default_rng()
         while a.n_workers < tgt:  # scale out
             new_w = a.add_worker()
             engine.on_worker_added(new_w)
@@ -62,14 +65,14 @@ class ElasticScalingPolicy(Policy):
             while len(a.chunks_of(new_w)) < share and donors:
                 d = donors[i % len(donors)]
                 if len(a.chunks_of(d)) > 1:
-                    a.move_n(1, d, new_w, self.rng)
+                    a.move_n(1, d, new_w, rng)
                 i += 1
                 if i > 10 * a.n_chunks:
                     break
         while a.n_workers > tgt:  # scale in (advance notice -> move chunks out)
             w = a.n_workers - 1
             engine.on_worker_removed(w)
-            a.remove_worker(w, self.rng)
+            a.remove_worker(w, rng)
 
 
 class RebalancePolicy(Policy):

@@ -15,6 +15,7 @@ from collections import Counter  # noqa: E402
 
 import jax  # noqa: E402
 
+from ..compat import set_mesh  # noqa: E402
 from ..configs import INPUT_SHAPES, TrainConfig, get_config  # noqa: E402
 from ..sharding import AxisRules  # noqa: E402
 from . import hlo_cost, steps  # noqa: E402
@@ -67,7 +68,7 @@ def main() -> None:
     tc = TrainConfig(accum_steps=args.accum)
     spec = steps.input_specs(cfg, shape, rules, tc)
     step = steps.build_step(cfg, shape, rules, spec)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(step, in_shardings=spec["in_shardings"],
                            out_shardings=spec["out_shardings"],
                            donate_argnums=spec["donate_argnums"]

@@ -19,6 +19,7 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 
+from ..compat import set_mesh  # noqa: E402
 from ..configs import INPUT_SHAPES, TrainConfig, get_config, list_archs  # noqa: E402
 from ..models import model as M  # noqa: E402
 from ..models import transformer as tfm  # noqa: E402
@@ -62,7 +63,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     chips = mesh_chips(mesh)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         spec, lowered, compiled = _lower_compile(cfg, shape, rules, tc=tc)
         t_full = time.time() - t0
     t_lower = t_full

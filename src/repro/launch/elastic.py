@@ -18,8 +18,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import AxisType, mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig, TrainConfig
 from ..models import model as M
 from ..optim import init_opt_state
@@ -28,8 +29,8 @@ from . import steps
 
 
 def data_mesh(devices: Sequence) -> Mesh:
-    return Mesh(np.asarray(devices), ("data",),
-                axis_types=(AxisType.Auto,))
+    return mesh_from_devices(devices, ("data",),
+                             axis_types=(AxisType.Auto,))
 
 
 class ElasticTrainer:
@@ -79,7 +80,7 @@ class ElasticTrainer:
             return NamedSharding(self.mesh, spec)
 
         batch = {k: jax.device_put(v, shard_for(v)) for k, v in batch.items()}
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             self.params, self.opt_state, metrics = self.step(
                 self.params, self.opt_state, batch)
         return {k: float(v) for k, v in metrics.items()}

@@ -10,18 +10,16 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+from ..compat import auto_axes, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """TPU v5e production mesh: 16x16 per pod; 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=auto_axes(len(axes)))
 
 
 def make_host_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
@@ -30,9 +28,9 @@ def make_host_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
     if data is None:
         data = n // model
     if model > 1:
-        return jax.make_mesh((data, model), ("data", "model"),
-                             axis_types=_auto(2))
-    return jax.make_mesh((data,), ("data",), axis_types=_auto(1))
+        return make_mesh((data, model), ("data", "model"),
+                         axis_types=auto_axes(2))
+    return make_mesh((data,), ("data",), axis_types=auto_axes(1))
 
 
 def mesh_chips(mesh: Mesh) -> int:

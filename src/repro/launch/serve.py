@@ -1,88 +1,149 @@
-"""Serving driver: batched prefill + decode with Chicle-style elastic
-request chunks.
+"""Serving CLI: thin launcher over the `repro.serve` continuous-batching
+subsystem (request pools, slotted KV cache, elastic worker scheduling).
 
-Requests live in chunks (groups of sequences); the assignment maps request
-chunks to serving workers, and the same rebalancing machinery shifts load —
-the inference-side analogue of the paper's training chunks.
+Requests live in slot-chunks; `core.chunks.Assignment` + `core.policies`
+map them onto an elastic worker pool, and `ServeEngine` carries KV state
+across scale events — the inference-side analogue of the paper's training
+chunks.
 
 CLI: PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-         --batch 4 --prompt-len 32 --decode-steps 16
+         --trace poisson --requests 16
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Dict
+import json
+from typing import Dict, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, smoke_variant
-from ..models import model as M
-from ..sharding import AxisRules
-from .mesh import make_host_mesh
+from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
+from ..serve import ServeEngine, poisson_arrivals, synthetic_requests
 from .train import scale_config
 
 
+def parse_scale_events(s: Optional[str]) -> Sequence[ScaleEvent]:
+    """'tick:workers,tick:workers' -> ScaleEvents on the engine tick clock."""
+    if not s:
+        return []
+    events = []
+    for part in s.split(","):
+        try:
+            at, n = part.split(":")
+            events.append(ScaleEvent(float(at), int(n)))
+        except ValueError:
+            raise ValueError(
+                f"--scale-events expects 'tick:workers,...'; got {part!r}")
+    return events
+
+
+def _range_arg(s: str):
+    """'min,max' (or a single value meaning min==max) -> (min, max)."""
+    parts = s.split(",")
+    if len(parts) == 1:
+        parts = parts * 2
+    if len(parts) != 2:
+        raise argparse.ArgumentTypeError(f"expected 'min,max', got {s!r}")
+    lo, hi = int(parts[0]), int(parts[1])
+    if lo > hi or lo <= 0:
+        raise argparse.ArgumentTypeError(f"bad range {s!r}")
+    return lo, hi
+
+
+def default_scale_schedule(n_requests: int, avg_new: float, capacity: int,
+                           workers: int) -> Sequence[ScaleEvent]:
+    """Smoke default: scale out to workers+1 a third of the way through the
+    expected run, back in at two thirds (k: w -> w+1 -> w)."""
+    est_ticks = max(int(np.ceil(n_requests * avg_new / capacity)) + 4, 9)
+    return [ScaleEvent(0, workers),
+            ScaleEvent(est_ticks // 3, workers + 1),
+            ScaleEvent(2 * est_ticks // 3, workers)]
+
+
 def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
-          batch: int = 4, prompt_len: int = 32, decode_steps: int = 16,
-          seed: int = 0, greedy: bool = True) -> Dict:
+          trace: str = "poisson", rate: float = 20.0, requests: int = 16,
+          capacity: int = 8, cache_len: int = 64, prefill_bucket: int = 16,
+          prompt_len: Tuple[int, int] = (8, 24),
+          max_new_tokens: Tuple[int, int] = (4, 12),
+          workers: int = 1, scale_events: Optional[str] = None,
+          straggler_policy: bool = False, seed: int = 0) -> Dict:
+    """Run an open-loop serving workload; returns the metrics summary."""
     cfg = get_config(arch)
     cfg = smoke_variant(cfg) if smoke else scale_config(cfg, scale)
-    mesh = make_host_mesh()
-    rules = AxisRules(mesh)
-    params = M.init_params(cfg, jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(requests, rate if trace == "poisson" else 0.0,
+                                rng=rng)
+    reqs = synthetic_requests(requests, vocab_size=cfg.vocab_size,
+                              arrivals=arrivals, prompt_len=prompt_len,
+                              max_new_tokens=max_new_tokens, rng=rng)
 
-    mem_len = cfg.encoder_seq or cfg.num_image_tokens
-    memory = (jnp.zeros((batch, mem_len, cfg.d_model), cfg.dtype)
-              if mem_len else None)
-    prompts = jax.random.randint(jax.random.key(seed + 1),
-                                 (batch, prompt_len), 0, cfg.vocab_size)
+    if scale_events is None:
+        sched = default_scale_schedule(
+            requests, float(np.mean(max_new_tokens)), capacity, workers)
+    else:
+        sched = parse_scale_events(scale_events)
+    policies = [ElasticScalingPolicy(sched)] if sched else []
+    if straggler_policy:
+        policies.append(StragglerMitigationPolicy())
 
-    cache_len = prompt_len + decode_steps
+    engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
+                         prefill_bucket=prefill_bucket, n_workers=workers,
+                         policies=policies, seed=seed)
+    metrics = engine.run(reqs)
+    out = metrics.summarize()
+    out["arch"] = arch
+    out["capacity"] = capacity
+    return out
 
-    @jax.jit
-    def prefill_fn(params, tokens, memory):
-        return M.prefill(cfg, params, tokens, memory=memory, rules=rules,
-                         remat=False, cache_len=cache_len)
 
-    @jax.jit
-    def decode_fn(params, cache, tok, pos):
-        return M.decode_step(cfg, params, cache, tok, pos, rules=rules)
-
-    with jax.set_mesh(mesh):
-        t0 = time.time()
-        logits, cache = prefill_fn(params, prompts, memory)
-        t_prefill = time.time() - t0
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens = [tok]
-        t0 = time.time()
-        for i in range(decode_steps - 1):
-            logits, cache = decode_fn(params, cache, tok,
-                                      jnp.int32(prompt_len + i))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    return {"generated": np.asarray(gen), "prefill_s": t_prefill,
-            "decode_s_per_tok": t_decode / max(decode_steps - 1, 1)}
+def _fmt_ms(v: Optional[float]) -> str:
+    return f"{v * 1e3:7.1f}ms" if v is not None else "    n/a"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "25m", "100m"])
+    ap.add_argument("--trace", default="poisson", choices=["poisson", "burst"])
+    ap.add_argument("--rate", type=float, default=20.0, help="req/s (poisson)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=8, help="decode slots")
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--prompt-len", type=_range_arg, default=(8, 24),
+                    help="min,max (or one value)")
+    ap.add_argument("--max-new", type=_range_arg, default=(4, 12),
+                    help="min,max (or one value)")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--scale-events", default=None,
+                    help="'tick:workers,...'; default = k -> k+1 -> k mid-run")
+    ap.add_argument("--straggler-policy", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true", help="print raw JSON")
     args = ap.parse_args()
-    out = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                prompt_len=args.prompt_len, decode_steps=args.decode_steps)
-    print(f"prefill {out['prefill_s']*1e3:.1f}ms, "
-          f"decode {out['decode_s_per_tok']*1e3:.1f}ms/tok")
-    print("generated tokens:", out["generated"][:, :8])
+
+    pl, mn = args.prompt_len, args.max_new
+    out = serve(args.arch, smoke=args.smoke, scale=args.scale,
+                trace=args.trace, rate=args.rate, requests=args.requests,
+                capacity=args.capacity, cache_len=args.cache_len,
+                prefill_bucket=args.prefill_bucket, prompt_len=pl,
+                max_new_tokens=mn, workers=args.workers,
+                scale_events=args.scale_events,
+                straggler_policy=args.straggler_policy, seed=args.seed)
+    if args.json:
+        print(json.dumps(out, indent=2))
+        return
+    print(f"{out['arch']}: {out['requests_finished']}/{out['requests_total']}"
+          f" requests, {out['tokens_generated']} tokens, "
+          f"{out['tokens_per_s']:.1f} tok/s over {out['wall_s']:.2f}s")
+    print(f"  TTFT p50 {_fmt_ms(out['ttft_p50_s'])}  "
+          f"p99 {_fmt_ms(out['ttft_p99_s'])}")
+    print(f"  TPOT p50 {_fmt_ms(out['tpot_p50_s'])}  "
+          f"p99 {_fmt_ms(out['tpot_p99_s'])}")
+    print(f"  occupancy {out['occupancy_mean']:.2f} over {out['n_ticks']} "
+          f"ticks; scale events {out['scale_events']}")
 
 
 if __name__ == "__main__":

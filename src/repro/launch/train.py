@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import set_mesh
 from ..configs import TrainConfig, get_config, smoke_variant
 from ..core import (Assignment, ChunkStore, ElasticScalingPolicy,
                     RebalancePolicy, ScaleEvent)
@@ -111,7 +112,7 @@ def train(arch: str, *, scale: Optional[str] = None, smoke: bool = False,
     sim_time = 0.0
     history = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for it in range(train_steps):
             stats: Dict = {}
 

@@ -216,7 +216,8 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     """One-token attention against a (possibly seq-sharded) cache.
 
     q: (B, 1, H_pad, hd); k_cache/v_cache: (B, Sc, KV, hd);
-    q_pos: scalar; k_pos: (Sc,) absolute positions (-1 = empty slot).
+    q_pos: scalar or (B, 1) per-row positions (continuous-batching slots);
+    k_pos: (Sc,) or (B, Sc) absolute positions (-1 = empty slot).
     """
     B, Q, HP, hd = q.shape
     scale = 1.0 / math.sqrt(hd)

@@ -195,14 +195,18 @@ def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
 
 
 def init_cache(cfg: ModelConfig, B: int, cache_len: int, *,
-               cross_len: int = 0) -> Dict[str, Any]:
+               cross_len: int = 0, per_slot: bool = False) -> Dict[str, Any]:
+    """per_slot: per-ROW k_pos (B, cache_len) so every sequence tracks its
+    own fill depth (continuous-batching slot pools); default is one shared
+    (cache_len,) vector for lockstep batches."""
     bt = _block_type(cfg)
     nb = tfm.n_blocks(cfg)
     shapes = tfm.block_cache_shapes(cfg, B, cache_len, bt, cross_len=cross_len)
     blocks = {k: jnp.zeros((nb,) + s, d) for k, (s, d) in shapes.items()}
     cache: Dict[str, Any] = {"blocks": blocks}
     if bt != "ssm":
-        cache["k_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+        shape = (B, cache_len) if per_slot else (cache_len,)
+        cache["k_pos"] = jnp.full(shape, -1, jnp.int32)
     return cache
 
 
@@ -231,7 +235,9 @@ def decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
                 pos: jax.Array, *, rules: AxisRules,
                 window: Optional[int] = None,
                 ring: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+    """One decode step.  token: (B, 1) int32; pos: scalar int32 OR a (B,)
+    vector of per-row positions (continuous-batching slot pools, paired with
+    a per-row (B, cache_len) k_pos from ``init_cache(per_slot=True)``).
 
     Returns (logits (B, 1, V), new cache).
     """
@@ -244,9 +250,20 @@ def decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
 
     if bt != "ssm":
         k_pos = cache["k_pos"]
-        W = k_pos.shape[0]
-        idx = pos % W if ring else jnp.minimum(pos, W - 1)
-        k_pos = k_pos.at[idx].set(pos)
+        W = k_pos.shape[-1]
+        if k_pos.ndim == 2:  # per-row cache: each row tracks its own depth
+            B = k_pos.shape[0]
+            posv = (pos if jnp.ndim(pos)
+                    else jnp.full((B,), pos, jnp.int32))  # lockstep batch
+            idx = posv % W if ring else jnp.minimum(posv, W - 1)
+            k_pos = k_pos.at[jnp.arange(B), idx].set(posv)
+        else:
+            if jnp.ndim(pos):
+                raise ValueError(
+                    "vector pos requires a per-row k_pos — build the cache "
+                    "with init_cache(per_slot=True) or prefill(true_len=...)")
+            idx = pos % W if ring else jnp.minimum(pos, W - 1)
+            k_pos = k_pos.at[idx].set(pos)
     else:
         k_pos = None
 
@@ -267,10 +284,16 @@ def decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
 def prefill(cfg: ModelConfig, params, tokens: jax.Array, *,
             memory: Optional[jax.Array] = None, rules: AxisRules,
             window: Optional[int] = None, remat: bool = True,
-            q_block: int = 512, cache_len: Optional[int] = None):
+            q_block: int = 512, cache_len: Optional[int] = None,
+            true_len: Optional[jax.Array] = None):
     """Prefill: forward over the prompt, returning last-token logits + a
     decode cache.  cache_len > S allocates headroom for subsequent decode
-    steps (k/v seq dims zero-padded, empty slots marked -1 in k_pos)."""
+    steps (k/v seq dims zero-padded, empty slots marked -1 in k_pos).
+
+    true_len: optional (B,) real prompt lengths when rows are right-padded to
+    a shared bucket length (serving).  Returned logits are taken at each
+    row's true last token and k_pos becomes per-row (B, cache_len) with pad
+    positions masked out (-1), matching ``init_cache(per_slot=True)``."""
     logits, aux, blocks = forward(cfg, params, tokens, memory=memory,
                                   rules=rules, window=window, remat=remat,
                                   return_cache=True, q_block=q_block)
@@ -288,6 +311,14 @@ def prefill(cfg: ModelConfig, params, tokens: jax.Array, *,
             return arr
         blocks = {k: pad_kv(k, v) for k, v in blocks.items()}
     cache: Dict[str, Any] = {"blocks": blocks}
+    if true_len is not None:
+        if bt != "ssm":
+            pos_row = jnp.arange(cache_len, dtype=jnp.int32)[None]
+            cache["k_pos"] = jnp.where(pos_row < true_len[:, None],
+                                       pos_row, -1)
+        last = jnp.take_along_axis(
+            logits, (true_len - 1).astype(jnp.int32)[:, None, None], axis=1)
+        return last, cache
     if bt != "ssm":
         cache["k_pos"] = jnp.concatenate([
             jnp.arange(S, dtype=jnp.int32),

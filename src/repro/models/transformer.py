@@ -188,8 +188,19 @@ def _self_attn_full(cfg, p, x, positions, *, window, causal=True, q_block=512,
 
 
 def _write_cache(cache_k, cache_v, k, v, pos, ring: bool):
-    """Write S new entries at pos (S=1 decode; S=seq prefill from 0)."""
+    """Write S new entries at pos (S=1 decode; S=seq prefill from 0).
+
+    pos may be a (B,) vector (continuous-batching slots: every sequence sits
+    at its own depth) — then S must be 1 and each row scatters independently.
+    """
     S = k.shape[1]
+    if jnp.ndim(pos):
+        B = k.shape[0]
+        W = cache_k.shape[1]
+        idx = pos % W if ring else jnp.minimum(pos, W - 1)
+        cache_k = cache_k.at[jnp.arange(B), idx].set(k[:, 0])
+        cache_v = cache_v.at[jnp.arange(B), idx].set(v[:, 0])
+        return cache_k, cache_v
     if ring:
         W = cache_k.shape[1]
         idx = pos % W
@@ -203,11 +214,17 @@ def _write_cache(cache_k, cache_v, k, v, pos, ring: bool):
 
 def _self_attn_decode(cfg, p, x, pos, k_pos, cache_k, cache_v, *, window,
                       ring, rules=None):
-    """x: (B,1,D). Returns (out, new_k, new_v)."""
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    """x: (B,1,D).  pos: scalar or (B,) per-slot.  Returns (out, k, v)."""
+    B = x.shape[0]
+    if jnp.ndim(pos):
+        positions = pos.reshape(B, 1).astype(jnp.int32)
+        q_pos = positions  # (B, 1) broadcasts against (B, Sc) k_pos
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q_pos = pos
     q, k, v = attn.qkv_project(cfg, p, x, positions, rules=rules)
     cache_k, cache_v = _write_cache(cache_k, cache_v, k, v, pos, ring)
-    ctx = attn.decode_attention(cfg, q, cache_k, cache_v, pos, k_pos,
+    ctx = attn.decode_attention(cfg, q, cache_k, cache_v, q_pos, k_pos,
                                 window=window)
     return attn.attn_out(p, ctx, rules), cache_k, cache_v
 

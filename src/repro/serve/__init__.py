@@ -1,0 +1,28 @@
+"""Elastic continuous-batching serving (`repro.serve`).
+
+Chicle's substrate applied to the inference path: a decode SLOT (one
+request + its KV-cache rows) is the serving analogue of a training chunk —
+mobile, stateful, and owned by the scheduler strictly between iterations.
+
+- `request`   — request/sequence lifecycle + Poisson/trace arrival traces
+- `slots`     — fixed-capacity slotted KV pool (alloc/free, pad-to-slot)
+- `scheduler` — admission control + prefill/decode interleaving over an
+                elastic worker pool, reusing `core.chunks.Assignment` and
+                `core.policies` (the slot-chunk -> worker map obeys the same
+                scheduler-phase ownership contract as training chunks)
+- `engine`    — `ServeEngine`: carries KV state across `resize(k)` events
+                (per-k jit cache + device_put resharding, mirroring
+                `launch.elastic.ElasticTrainer`) and records TTFT /
+                per-token latency / throughput / occupancy
+"""
+from .engine import ServeEngine, ServeMetrics
+from .request import (Request, RequestState, poisson_arrivals,
+                      synthetic_requests, trace_arrivals)
+from .scheduler import SlotScheduler
+from .slots import SlotPool
+
+__all__ = [
+    "Request", "RequestState", "ServeEngine", "ServeMetrics", "SlotPool",
+    "SlotScheduler", "poisson_arrivals", "synthetic_requests",
+    "trace_arrivals",
+]

@@ -1,0 +1,328 @@
+"""ServeEngine: continuous-batching decode over a slotted KV pool, elastic
+across `resize(k)` events.
+
+One engine tick =
+  scheduler phase : policies (scale/rebalance/straggler) -> admission ->
+                    per-request bucketed prefill + KV insert into free slots
+  solver phase    : ONE jitted decode step over the whole pool (every active
+                    slot advances at its own position; finished/empty slots
+                    are masked on the host), bracketed by the assignment's
+                    begin/end_iteration ownership contract.
+
+Elasticity mirrors `launch.elastic.ElasticTrainer`: `resize(k)` rebuilds the
+mesh over the first min(k, n_devices) devices, re-shards params + the KV
+pool with `jax.device_put` (the chunk-transfer analogue for serving state),
+and swaps to a per-k cached jitted step — in-flight requests keep their KV
+rows and next-token stream bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..compat import mesh_from_devices, set_mesh
+from ..configs.base import ModelConfig
+from ..models import model as M
+from ..sharding import AxisRules
+from .request import Request, RequestState
+from .scheduler import SlotScheduler
+
+# families with a flat (B, cache_len) attention cache; recurrent-state
+# families (ssm/hybrid) need exact-length prefill and are follow-on work
+SUPPORTED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class TickRecord:
+    tick: int
+    now: float
+    n_active: int
+    n_workers: int
+    occupancy: float
+    decode_s: float
+    admitted: int
+    tokens_emitted: int
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    requests: List[Request] = dataclasses.field(default_factory=list)
+    ticks: List[TickRecord] = dataclasses.field(default_factory=list)
+    scale_events: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)  # (tick, k_before, k_after)
+    wall_s: float = 0.0
+
+    def summarize(self) -> Dict[str, Any]:
+        done = [r for r in self.requests if r.state is RequestState.FINISHED]
+        ttfts = np.array([r.ttft() for r in done if r.ttft() is not None])
+        tpots = np.array([r.tpot() for r in done if r.tpot() is not None])
+        toks = sum(r.n_generated for r in done)
+        pct = (lambda a, q: float(np.percentile(a, q)) if len(a) else None)
+        occ = np.array([t.occupancy for t in self.ticks])
+        return {
+            "requests_finished": len(done),
+            "requests_total": len(self.requests),
+            "tokens_generated": toks,
+            "tokens_per_s": toks / self.wall_s if self.wall_s else 0.0,
+            "ttft_p50_s": pct(ttfts, 50), "ttft_p99_s": pct(ttfts, 99),
+            "tpot_p50_s": pct(tpots, 50), "tpot_p99_s": pct(tpots, 99),
+            "occupancy_mean": float(occ.mean()) if len(occ) else 0.0,
+            "n_ticks": len(self.ticks),
+            "scale_events": [list(e) for e in self.scale_events],
+            "wall_s": self.wall_s,
+        }
+
+
+class ServeEngine:
+    """Continuous-batching serving engine with Chicle-style elasticity."""
+
+    def __init__(self, cfg: ModelConfig, *, capacity: int = 8,
+                 cache_len: int = 64, prefill_bucket: int = 16,
+                 n_workers: int = 1, policies: Sequence = (),
+                 slots_per_chunk: int = 2, max_admit_per_tick: int = 4,
+                 seed: int = 0, params: Optional[Any] = None):
+        if cfg.family not in SUPPORTED_FAMILIES:
+            raise NotImplementedError(
+                f"ServeEngine supports flat-KV families {SUPPORTED_FAMILIES}; "
+                f"got {cfg.family!r} (recurrent-state prefill is follow-on)")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.cache_len = cache_len
+        self.prefill_bucket = prefill_bucket
+        self.devices = list(jax.devices())
+        self.rng = np.random.default_rng(seed)
+        self.params = (params if params is not None
+                       else M.init_params(cfg, jax.random.key(seed)))
+        self.scheduler = SlotScheduler(
+            capacity, n_workers=n_workers, slots_per_chunk=slots_per_chunk,
+            policies=policies, max_admit_per_tick=max_admit_per_tick,
+            seed=seed)
+
+        cache = M.init_cache(cfg, capacity, cache_len, per_slot=True)
+        self.blocks = cache["blocks"]
+        self.k_pos = cache["k_pos"]
+        # host-side per-slot stream state
+        self.next_tok = np.zeros((capacity, 1), np.int32)
+        self._by_slot: Dict[int, Request] = {}
+        self.metrics = ServeMetrics()
+        self._tick = 0
+        self._t0: Optional[float] = None
+        self._last_stats: Dict = {}
+
+        # per-k compiled artifacts: k_mesh -> (mesh, rules, decode_fn)
+        self._k_cache: Dict[int, Tuple[Mesh, AxisRules, Any]] = {}
+        self._prefill_cache: Dict[Tuple[int, int], Any] = {}
+        self.k = 0
+        self.mesh: Optional[Mesh] = None
+        self.resize(n_workers)
+
+    # --- elasticity -------------------------------------------------------
+    def _k_mesh(self, k: int) -> int:
+        return max(1, min(k, len(self.devices)))
+
+    def _build(self, km: int):
+        mesh = mesh_from_devices(self.devices[:km], ("data",))
+        rules = AxisRules(mesh)
+        cfg = self.cfg
+
+        def decode(params, blocks, k_pos, tok, pos):
+            cache = {"blocks": blocks, "k_pos": k_pos}
+            logits, new_cache = M.decode_step(cfg, params, cache, tok, pos,
+                                              rules=rules)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return nxt, new_cache["blocks"], new_cache["k_pos"]
+
+        return mesh, rules, jax.jit(decode, donate_argnums=(1, 2))
+
+    def _cache_sharding(self, mesh: Mesh):
+        """Shard the pool over the data axis when capacity divides, else
+        replicate (GSPMD would pad unevenly on the batch dim)."""
+        ndev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        batch = "data" if self.capacity % ndev == 0 else None
+        return (NamedSharding(mesh, P(None, batch)),
+                NamedSharding(mesh, P(batch)))
+
+    def resize(self, k: int) -> None:
+        """Elastic scale event: k logical workers, mesh over the first
+        min(k, n_devices) devices.  KV state and in-flight requests carry
+        over; only the sharding and the compiled step change."""
+        k = max(1, k)
+        if self.scheduler.n_workers != k:
+            self.scheduler.set_workers(k)
+        km = self._k_mesh(k)
+        if km not in self._k_cache:
+            self._k_cache[km] = self._build(km)
+        mesh, rules, _ = self._k_cache[km]
+        if mesh is not self.mesh:
+            blocks_s, row_s = self._cache_sharding(mesh)
+            self.params = jax.device_put(self.params,
+                                         NamedSharding(mesh, P()))
+            self.blocks = jax.device_put(self.blocks, blocks_s)
+            self.k_pos = jax.device_put(self.k_pos, row_s)
+        self.k, self.mesh, self.rules = k, mesh, rules
+
+    # --- prefill ----------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        return min(((n + b - 1) // b) * b, self.cache_len)
+
+    def _prefill_fn(self, bucket: int):
+        key = (self._k_mesh(self.k), bucket)
+        if key not in self._prefill_cache:
+            cfg, rules, cache_len = self.cfg, self.rules, self.cache_len
+
+            def prefill(params, tokens, true_len):
+                logits, cache = M.prefill(cfg, params, tokens, rules=rules,
+                                          remat=False, cache_len=cache_len,
+                                          true_len=true_len)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return nxt, cache["blocks"], cache["k_pos"]
+
+            self._prefill_cache[key] = jax.jit(prefill)
+        return self._prefill_cache[key]
+
+    def _insert(self, slots, blocks_rows, k_pos_rows) -> None:
+        """Scatter prefilled rows into the pool at `slots` (one batched
+        scatter per admit group — a full pool copy; paged KV is the named
+        follow-on)."""
+        idx = jnp.asarray(slots, jnp.int32)
+        # rows (nb, n, cache_len, ...) scatter into pool (nb, cap, cache_len, ...)
+        self.blocks = jax.tree.map(
+            lambda pool, rows: pool.at[:, idx].set(rows),
+            self.blocks, blocks_rows)
+        self.k_pos = self.k_pos.at[idx].set(k_pos_rows)
+
+    def _do_prefill(self, admitted: Sequence[Request]) -> None:
+        """Prefill this tick's admissions, one batched forward per shared
+        bucket length, and insert their KV rows into the pool."""
+        groups: Dict[int, List[Request]] = {}
+        for r in admitted:
+            groups.setdefault(self._bucket(r.prompt_len), []).append(r)
+        for bucket, group in sorted(groups.items()):
+            n = len(group)
+            toks = np.zeros((n, bucket), np.int32)
+            lens = np.zeros(n, np.int32)
+            for i, r in enumerate(group):
+                toks[i, : r.prompt_len] = r.prompt
+                lens[i] = r.prompt_len
+            nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray(lens))
+            self._insert([r.slot for r in group], blocks_rows, k_pos_rows)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            now = self._now()
+            for i, r in enumerate(group):
+                r.generated.append(int(nxt[i]))
+                r.t_first_token = now
+                if r.done():  # max_new_tokens == 1: prefill's token ends it
+                    self.scheduler.release(r, now)
+                    continue
+                r.state = RequestState.DECODING
+                self.next_tok[r.slot, 0] = int(nxt[i])
+                self.scheduler.pool.pos[r.slot] = r.prompt_len
+                self._by_slot[r.slot] = r
+
+    # --- main loop --------------------------------------------------------
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        for r in sorted(requests, key=lambda r: r.arrival_time):
+            # reject up front: a mid-run failure would abort in-flight
+            # requests and leak the already-allocated slot
+            if r.prompt_len + r.max_new_tokens > self.cache_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
+                    f"{r.max_new_tokens} exceeds cache_len {self.cache_len}")
+            self.scheduler.submit(r)
+            self.metrics.requests.append(r)
+
+    def tick(self) -> TickRecord:
+        now = self._now()
+        sched = self.scheduler
+
+        # ---- scheduler phase: policies may rescale/rebalance the pool ----
+        stats: Dict = dict(self._last_stats)
+        k_before = sched.n_workers
+        sched.between_ticks(stats)
+        if sched.n_workers != k_before:
+            self.metrics.scale_events.append(
+                (self._tick, k_before, sched.n_workers))
+            self.resize(sched.n_workers)
+        admitted = sched.admit(now)
+        if admitted:
+            self._do_prefill(admitted)
+
+        # ---- solver phase: one pool-wide decode step ----
+        emitted = 0
+        t_step = 0.0
+        active = sorted(self._by_slot)
+        if active:
+            sched.begin_iteration()
+            _, _, decode_fn = self._k_cache[self._k_mesh(self.k)]
+            pos = jnp.asarray(
+                np.minimum(sched.pool.pos, self.cache_len - 1), jnp.int32)
+            t0 = time.perf_counter()
+            nxt, self.blocks, self.k_pos = decode_fn(
+                self.params, self.blocks, self.k_pos,
+                jnp.asarray(self.next_tok), pos)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            t_step = time.perf_counter() - t0
+            sched.end_iteration()
+
+            now = self._now()
+            for slot in active:
+                req = self._by_slot[slot]
+                req.generated.append(int(nxt[slot]))
+                self.next_tok[slot, 0] = int(nxt[slot])
+                sched.pool.pos[slot] += 1
+                emitted += 1
+                if req.done():
+                    del self._by_slot[slot]
+                    sched.release(req, now)
+        else:
+            sched.sim_time += 1.0  # idle ticks still advance schedule time
+
+        # modeled per-worker timing attribution feeds the same policy
+        # feedback loop as training (load-proportional split of the step)
+        loads = sched.active_per_worker()
+        total = max(int(loads.sum()), 1)
+        self._last_stats = {
+            "task_times": {w: t_step * loads[w] / total
+                           for w in range(sched.n_workers)},
+            "per_sample_times": {w: t_step / total
+                                 for w in range(sched.n_workers)},
+        }
+
+        rec = TickRecord(tick=self._tick, now=self._now(),
+                         n_active=len(self._by_slot),
+                         n_workers=sched.n_workers,
+                         occupancy=sched.pool.occupancy(),
+                         decode_s=t_step, admitted=len(admitted),
+                         tokens_emitted=emitted)
+        self.metrics.ticks.append(rec)
+        self._tick += 1
+        return rec
+
+    def run(self, requests: Sequence[Request], *,
+            max_ticks: int = 100_000) -> ServeMetrics:
+        """Drive the open-loop workload to completion."""
+        self.submit(requests)
+        self._now()  # start the clock
+        sched = self.scheduler
+        while (sched.pending or self._by_slot) and self._tick < max_ticks:
+            if not self._by_slot and sched.pending:
+                wait = sched.pending[0].arrival_time - self._now()
+                if wait > 0:  # idle until the next open-loop arrival
+                    time.sleep(min(wait, 0.05))
+            with set_mesh(self.mesh):  # re-entered so resize(k) takes effect
+                self.tick()
+        self.metrics.wall_s = self._now()
+        return self.metrics

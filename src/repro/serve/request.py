@@ -1,0 +1,101 @@
+"""Request/sequence lifecycle + open-loop arrival traces.
+
+A `Request` moves QUEUED -> PREFILL -> DECODING -> FINISHED.  Arrivals are
+open-loop (the workload does not wait for completions): a Poisson process,
+an explicit trace of arrival offsets, or a burst (all at t=0).  Per-request
+timestamps feed the engine's TTFT / per-token latency metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its measured lifecycle."""
+
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_time: float = 0.0  # seconds from workload start (open loop)
+
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # measured timestamps (seconds from engine start)
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new_tokens
+
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_time
+
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first."""
+        if self.t_finished is None or self.t_first_token is None \
+                or self.n_generated < 2:
+            return None
+        return (self.t_finished - self.t_first_token) / (self.n_generated - 1)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(n: int, rate: float,
+                     rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """n arrival offsets (seconds) of a Poisson process with `rate` req/s.
+    rate <= 0 means an instantaneous burst (all arrive at t=0)."""
+    if rate <= 0:
+        return np.zeros(n)
+    rng = rng or np.random.default_rng(0)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def trace_arrivals(offsets: Sequence[float]) -> np.ndarray:
+    """Explicit arrival-offset trace (replayed verbatim, sorted)."""
+    return np.sort(np.asarray(list(offsets), dtype=float))
+
+
+def synthetic_requests(n: int, *, vocab_size: int, arrivals: np.ndarray,
+                       prompt_len: tuple = (8, 32),
+                       max_new_tokens: tuple = (4, 16),
+                       rng: Optional[np.random.Generator] = None
+                       ) -> List[Request]:
+    """Random-token requests with lengths drawn uniformly from the given
+    inclusive ranges, stamped with the supplied arrival offsets."""
+    rng = rng or np.random.default_rng(0)
+    assert len(arrivals) == n
+    reqs = []
+    for i in range(n):
+        lp = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        mn = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
+        prompt = rng.integers(0, vocab_size, size=lp).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mn,
+                            arrival_time=float(arrivals[i])))
+    return reqs

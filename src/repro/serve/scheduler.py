@@ -1,0 +1,133 @@
+"""Admission control + slot-chunk scheduling over an elastic worker pool.
+
+Decode slots are grouped into SLOT-CHUNKS (the serving analogue of the
+paper's data chunks) and `core.chunks.Assignment` maps slot-chunks onto
+serving workers.  The scheduler obeys the exact ownership contract of the
+training side: the assignment is mutated ONLY between iterations
+(`Assignment._check` enforces it), and the unmodified `core.policies`
+(elastic scaling, rebalancing, straggler mitigation) drive the worker pool
+— `SlotScheduler` quacks like the `UniTaskEngine` they were written
+against (assignment / store / rng / sim_time / on_worker_added hooks).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.chunks import Assignment, ChunkStore
+from ..core.policies import Policy
+from .request import Request, RequestState
+from .slots import SlotPool
+
+
+class SlotScheduler:
+    """Owns the pending queue, the slot pool, and the slot-chunk assignment."""
+
+    def __init__(self, capacity: int, *, n_workers: int = 1,
+                 slots_per_chunk: int = 2,
+                 policies: Sequence[Policy] = (),
+                 max_admit_per_tick: int = 4,
+                 seed: int = 0,
+                 on_worker_added: Optional[Callable[[int], None]] = None,
+                 on_worker_removed: Optional[Callable[[int], None]] = None):
+        self.pool = SlotPool(capacity)
+        # slot ids ARE the chunk store's samples: chunk c owns slots
+        # [c*spc, (c+1)*spc) and moves between workers as one unit.
+        self.store = ChunkStore({"slot": np.arange(capacity)},
+                                chunk_size=slots_per_chunk)
+        self.rng = np.random.default_rng(seed)
+        self.assignment = Assignment(self.store.n_chunks, n_workers,
+                                     np.random.default_rng(seed))
+        self.policies = list(policies)
+        self.max_admit_per_tick = max_admit_per_tick
+        self.sim_time = 0.0  # tick index; policies key scale events on it
+        self.pending: List[Request] = []  # kept sorted by arrival_time
+        self._hook_added = on_worker_added or (lambda w: None)
+        self._hook_removed = on_worker_removed or (lambda w: None)
+
+    # --- UniTaskEngine facade for core.policies ---------------------------
+    def on_worker_added(self, w: int) -> None:
+        self._hook_added(w)
+
+    def on_worker_removed(self, w: int) -> None:
+        self._hook_removed(w)
+
+    # --- queries ----------------------------------------------------------
+    @property
+    def n_workers(self) -> int:
+        return self.assignment.n_workers
+
+    def worker_of_slot(self, slot: int) -> int:
+        cid = slot // self.store.chunk_size
+        for w in range(self.assignment.n_workers):
+            if cid in self.assignment.chunks_of(w):
+                return w
+        raise KeyError(f"chunk {cid} unassigned")
+
+    def slots_of_worker(self, w: int) -> List[int]:
+        spc = self.store.chunk_size
+        out: List[int] = []
+        for cid in self.assignment.chunks_of(w):
+            out.extend(s for s in range(cid * spc,
+                                        min((cid + 1) * spc,
+                                            self.pool.capacity)))
+        return out
+
+    def active_per_worker(self) -> np.ndarray:
+        """Active decode slots per worker (the serving load vector)."""
+        mask = self.pool.active_mask()
+        return np.array([int(mask[self.slots_of_worker(w)].sum())
+                         for w in range(self.n_workers)])
+
+    # --- scheduler phase (between iterations only) ------------------------
+    def submit(self, req: Request) -> None:
+        # sorted insertion keeps FCFS-by-arrival across multiple submit calls
+        bisect.insort(self.pending, req, key=lambda r: r.arrival_time)
+
+    def admit(self, now: float) -> List[Request]:
+        """Admit arrived requests into free slots (FCFS, bounded per tick)."""
+        admitted: List[Request] = []
+        while (self.pending and self.pool.n_free
+               and len(admitted) < self.max_admit_per_tick
+               and self.pending[0].arrival_time <= now):
+            req = self.pending.pop(0)
+            req.slot = self.pool.alloc(req.rid)
+            req.state = RequestState.PREFILL
+            req.t_admitted = now
+            admitted.append(req)
+        return admitted
+
+    def release(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.t_finished = now
+        if req.slot is not None:
+            self.pool.free(req.slot)
+            req.slot = None
+
+    def between_ticks(self, stats: Dict) -> None:
+        """Run the attached policies (scheduler phase; may resize/rebalance
+        the slot-chunk assignment through the ownership-checked mutators)."""
+        for p in self.policies:
+            p.between_iterations(self, stats)
+
+    def set_workers(self, k: int) -> None:
+        """Explicit elastic resize of the logical worker pool."""
+        a = self.assignment
+        while a.n_workers < k:
+            w = a.add_worker()
+            self.on_worker_added(w)
+        while a.n_workers > k:
+            w = a.n_workers - 1
+            self.on_worker_removed(w)
+            a.remove_worker(w, self.rng)
+        a.rebalance_even(self.rng)
+
+    # --- iteration phase delegation ---------------------------------------
+    def begin_iteration(self) -> None:
+        self.assignment.begin_iteration()
+
+    def end_iteration(self) -> None:
+        self.assignment.end_iteration()
+        self.sim_time += 1.0

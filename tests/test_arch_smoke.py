@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro.configs import TrainConfig, get_config, list_archs, smoke_variant
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps
@@ -52,7 +53,7 @@ def test_forward_shapes_and_finite(arch, mesh_rules):
     cfg = smoke_variant(get_config(arch))
     params = M.init_params(cfg, jax.random.key(0))
     batch = _batch(cfg, jax.random.key(1))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         logits, aux = M.forward(cfg, params, batch["tokens"],
                                 memory=batch.get("memory"), rules=rules)
     assert logits.shape == (B, S, cfg.vocab_size)
@@ -69,7 +70,7 @@ def test_train_step(arch, mesh_rules):
     opt_state = init_opt_state(params)
     batch = _batch(cfg, jax.random.key(1))
     step = steps.make_train_step(cfg, rules, tc)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         new_params, new_opt, metrics = step(params, opt_state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert np.isfinite(float(metrics["grad_norm"]))
@@ -87,7 +88,7 @@ def test_decode_step(arch, mesh_rules):
     params = M.init_params(cfg, jax.random.key(0))
     mem_len = cfg.encoder_seq or cfg.num_image_tokens
     cache = M.init_cache(cfg, B, 32, cross_len=mem_len)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         logits, cache2 = M.decode_step(
             cfg, params, cache, jnp.zeros((B, 1), jnp.int32), jnp.int32(0),
             rules=rules)
@@ -103,7 +104,7 @@ def test_prefill_matches_decode(arch, mesh_rules):
     cfg = smoke_variant(get_config(arch))
     params = M.init_params(cfg, jax.random.key(0))
     toks = jax.random.randint(jax.random.key(1), (B, 16), 0, cfg.vocab_size)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         full_logits, _ = M.forward(cfg, params, toks, rules=rules, remat=False)
         pre_logits, cache = M.prefill(cfg, params, toks[:, :-1], rules=rules,
                                       remat=False, cache_len=32)

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the chunk/assignment invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Assignment, ChunkStore
 from repro.data import make_svm_data

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro.configs import INPUT_SHAPES, TrainConfig, get_config, list_archs, smoke_variant
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
@@ -85,7 +86,7 @@ def test_accum_steps_matches_single_batch():
     for A in (1, 4):
         tc = TrainConfig(learning_rate=1e-2, accum_steps=A, remat=False)
         step = steps.make_train_step(cfg, rules, tc)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p2, _, m = step(params, init_opt_state(params), batch)
         outs[A] = p2
     diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
@@ -105,7 +106,7 @@ def test_lsgd_step_h1_matches_msgd():
              "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
              "weights": jnp.ones((B,))}
     tc = TrainConfig(learning_rate=1e-2, local_steps=1, remat=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         msgd = steps.make_train_step(cfg, rules, tc)
         p_m, _, _ = msgd(params, init_opt_state(params), batch)
         lsgd = steps.make_lsgd_train_step(cfg, rules, tc)
@@ -129,7 +130,7 @@ def test_lsgd_step_h4_runs_and_learns():
              "weights": jnp.ones((B,))}
     tc = TrainConfig(learning_rate=5e-3, local_steps=4, remat=False)
     step = jax.jit(steps.make_lsgd_train_step(cfg, rules, tc))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         losses = []
         for _ in range(5):
             params, mom, m = step(params, mom, batch)

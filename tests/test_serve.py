@@ -1,0 +1,254 @@
+"""Serving-subsystem tests: slot-pool invariants, scheduler ownership
+contract, vectorized per-slot decode vs scalar decode, KV survival across
+elastic resize, and an end-to-end continuous-batching smoke run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import ElasticScalingPolicy, ScaleEvent
+from repro.models import model as M
+from repro.serve import (ServeEngine, SlotPool, SlotScheduler,
+                         poisson_arrivals, synthetic_requests)
+from repro.serve.slots import SlotError
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_variant(get_config("smollm-360m"))
+
+
+# ---------------------------------------------------------------------------
+# Slot pool
+# ---------------------------------------------------------------------------
+
+
+def test_slot_pool_alloc_free_invariants():
+    pool = SlotPool(4)
+    slots = [pool.alloc(rid) for rid in range(4)]
+    assert sorted(slots) == [0, 1, 2, 3]
+    assert pool.n_free == 0 and pool.occupancy() == 1.0
+    with pytest.raises(SlotError):
+        pool.alloc(99)  # exhausted
+    pool.free(slots[1])
+    with pytest.raises(SlotError):
+        pool.free(slots[1])  # double free
+    assert pool.alloc(5) == slots[1]  # recycled
+    pool.check_invariants()
+
+
+def test_slot_pool_random_churn():
+    rng = np.random.default_rng(0)
+    pool = SlotPool(8)
+    held = []
+    for i in range(200):
+        if held and (pool.n_free == 0 or rng.random() < 0.5):
+            pool.free(held.pop(rng.integers(len(held))))
+        else:
+            held.append(pool.alloc(i))
+        pool.check_invariants()
+    assert pool.n_used == len(held)
+
+
+# ---------------------------------------------------------------------------
+# Arrivals
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_generators():
+    a = poisson_arrivals(50, rate=10.0, rng=np.random.default_rng(3))
+    b = poisson_arrivals(50, rate=10.0, rng=np.random.default_rng(3))
+    assert (a == b).all() and (np.diff(a) >= 0).all() and (a >= 0).all()
+    burst = poisson_arrivals(5, rate=0.0)
+    assert (burst == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler ownership contract + elasticity
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_phase_contract():
+    """The slot-chunk assignment may only be mutated between iterations."""
+    s = SlotScheduler(8, n_workers=2, slots_per_chunk=2)
+    s.begin_iteration()
+    with pytest.raises(RuntimeError, match="ownership contract"):
+        s.set_workers(3)
+    with pytest.raises(RuntimeError, match="ownership contract"):
+        s.assignment.move_n(1, 0, 1)
+    s.end_iteration()
+    s.set_workers(3)  # legal between iterations
+    assert s.n_workers == 3
+
+
+def test_scheduler_scale_conserves_chunks():
+    s = SlotScheduler(16, n_workers=1, slots_per_chunk=2)
+    n_chunks = s.store.n_chunks
+    for k in (3, 1, 4, 2):
+        s.set_workers(k)
+        assert s.n_workers == k
+        assert int(s.assignment.counts().sum()) == n_chunks
+        # every slot still maps to exactly one worker
+        owners = [s.worker_of_slot(sl) for sl in range(16)]
+        assert all(0 <= w < k for w in owners)
+
+
+def test_submit_keeps_fcfs_across_batches():
+    """A later submit() with earlier arrivals must not hide behind an
+    unarrived head-of-line request."""
+    s = SlotScheduler(4, n_workers=1, max_admit_per_tick=8)
+    late = synthetic_requests(1, vocab_size=64, arrivals=np.array([5.0]))
+    early = synthetic_requests(2, vocab_size=64, arrivals=np.array([0.1, 0.2]))
+    for r in late:
+        s.submit(r)
+    for r in early:
+        s.submit(r)
+    assert [r.arrival_time for r in s.pending] == [0.1, 0.2, 5.0]
+    assert len(s.admit(now=1.0)) == 2  # the early pair, not blocked
+
+
+def test_admission_respects_capacity_and_arrival():
+    s = SlotScheduler(2, n_workers=1, max_admit_per_tick=8)
+    reqs = synthetic_requests(
+        4, vocab_size=64, arrivals=np.array([0.0, 0.0, 0.0, 99.0]))
+    for r in reqs:
+        s.submit(r)
+    admitted = s.admit(now=1.0)
+    assert len(admitted) == 2  # capacity-bound, not arrival-bound
+    s.release(admitted[0], now=2.0)
+    assert [r.rid for r in s.admit(now=1.0)] == [2]  # FCFS; rid 3 not arrived
+
+
+# ---------------------------------------------------------------------------
+# Vectorized per-slot decode == per-request scalar decode
+# ---------------------------------------------------------------------------
+
+
+def test_per_slot_decode_matches_scalar(cfg):
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    lens = [5, 9]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    CACHE, BUCKET, STEPS = 20, 12, 5
+
+    def scalar_run(prompt):
+        toks = jnp.asarray(prompt)[None]
+        logits, cache = M.prefill(cfg, params, toks, rules=None, remat=False,
+                                  cache_len=CACHE)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [int(tok[0, 0])]
+        for i in range(STEPS - 1):
+            logits, cache = M.decode_step(cfg, params, cache, tok,
+                                          jnp.int32(len(prompt) + i),
+                                          rules=None)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        return out
+
+    refs = [scalar_run(p) for p in prompts]
+
+    padded = np.zeros((2, BUCKET), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, : len(p)] = p
+    true_len = jnp.asarray(lens, jnp.int32)
+    logits, cache = M.prefill(cfg, params, jnp.asarray(padded), rules=None,
+                              remat=False, cache_len=CACHE, true_len=true_len)
+    assert cache["k_pos"].shape == (2, CACHE)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [[int(tok[i, 0])] for i in range(2)]
+    pos = true_len
+    for _ in range(STEPS - 1):
+        logits, cache = M.decode_step(cfg, params, cache, tok, pos, rules=None)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(2):
+            outs[i].append(int(tok[i, 0]))
+        pos = pos + 1
+    assert outs == refs
+
+
+# ---------------------------------------------------------------------------
+# Engine: KV survives resize; end-to-end smoke
+# ---------------------------------------------------------------------------
+
+
+def _burst_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return synthetic_requests(n, vocab_size=cfg.vocab_size,
+                              arrivals=np.zeros(n), prompt_len=(6, 16),
+                              max_new_tokens=(5, 9), rng=rng)
+
+
+def _token_streams(metrics):
+    return {r.rid: list(r.generated) for r in metrics.requests}
+
+
+def test_kv_survives_resize_identical_tokens(cfg):
+    """k: 1 -> 2 -> 1 mid-run must not change a single generated token
+    (same admissions, same KV rows, same decode math after resharding)."""
+    base = ServeEngine(cfg, capacity=4, cache_len=32, prefill_bucket=8,
+                       n_workers=1, seed=0)
+    ref = _token_streams(base.run(_burst_requests(cfg, 8)))
+
+    pol = ElasticScalingPolicy([ScaleEvent(0, 1), ScaleEvent(3, 2),
+                                ScaleEvent(7, 1)])
+    eng = ServeEngine(cfg, capacity=4, cache_len=32, prefill_bucket=8,
+                      n_workers=1, policies=[pol], seed=0)
+    m = eng.run(_burst_requests(cfg, 8))
+    assert len(m.scale_events) == 2, m.scale_events
+    assert _token_streams(m) == ref
+    # nothing dropped across the scale events
+    assert m.summarize()["requests_finished"] == 8
+
+
+def test_engine_end_to_end_smoke(cfg):
+    reqs = synthetic_requests(
+        10, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(10, 100.0, np.random.default_rng(1)),
+        prompt_len=(6, 20), max_new_tokens=(4, 10),
+        rng=np.random.default_rng(1))
+    eng = ServeEngine(cfg, capacity=4, cache_len=48, prefill_bucket=8,
+                      n_workers=1, seed=0)
+    summary = eng.run(reqs).summarize()
+    assert summary["requests_finished"] == 10
+    assert summary["tokens_per_s"] > 0
+    assert summary["ttft_p50_s"] is not None
+    assert summary["tpot_p50_s"] is not None
+    assert 0 < summary["occupancy_mean"] <= 1
+    # every request's stream has exactly max_new_tokens tokens
+    for r in eng.metrics.requests:
+        assert len(r.generated) == r.max_new_tokens
+
+
+def test_single_token_request_stops_at_prefill(cfg):
+    """max_new_tokens=1 finishes on the prefill-produced token: exactly one
+    token generated, slot released without ever entering the decode pool."""
+    eng = ServeEngine(cfg, capacity=2, cache_len=32, prefill_bucket=8,
+                      n_workers=1, seed=0)
+    reqs = synthetic_requests(3, vocab_size=cfg.vocab_size,
+                              arrivals=np.zeros(3), prompt_len=(6, 10),
+                              max_new_tokens=(1, 1),
+                              rng=np.random.default_rng(0))
+    summary = eng.run(reqs).summarize()
+    assert summary["requests_finished"] == 3
+    for r in eng.metrics.requests:
+        assert len(r.generated) == 1
+    eng.scheduler.pool.check_invariants()
+    assert eng.scheduler.pool.n_used == 0
+
+
+def test_engine_rejects_oversized_request(cfg):
+    eng = ServeEngine(cfg, capacity=2, cache_len=16, prefill_bucket=8,
+                      n_workers=1, seed=0)
+    reqs = synthetic_requests(1, vocab_size=cfg.vocab_size,
+                              arrivals=np.zeros(1), prompt_len=(14, 14),
+                              max_new_tokens=(8, 8))
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        eng.run(reqs)
+
+
+def test_engine_unsupported_family():
+    ssm = smoke_variant(get_config("rwkv6-1.6b"))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(ssm, capacity=2, cache_len=16)
