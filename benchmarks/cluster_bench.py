@@ -1,0 +1,149 @@
+"""Cluster orchestration benchmark: 2 elastic trainers + 1 bursty server
+contending over 8 simulated nodes under the weighted fair-share allocator,
+emitting ONE JSON perf record (makespan, aggregate utilization, Jain
+fairness, preemption count) so future PRs can track the scheduling path.
+
+The record also carries the paper's headline check: each trainer's
+per-iteration convergence curve must be bit-identical to a solo run of the
+same job on an idle cluster — under Chicle, being preempted and squeezed
+by the serve burst changes *when* iterations happen, never *what* they
+compute (elasticity is algorithmically free).
+
+    PYTHONPATH=src python benchmarks/cluster_bench.py [--fast] [--dry-run]
+        [--out cluster_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.cluster import (ClusterOrchestrator, ClusterTrace, DevicePool,
+                           FairShareAllocator, JobSpec, ServeJob, arrive,
+                           burst, cocoa_train_job)
+from repro.configs import get_config, smoke_variant
+
+
+def workload_sizes(fast: bool):
+    """(n_samples, n_features, iterations) — single source of truth shared
+    by the contention run and the solo reference curves."""
+    return (1200, 32, 12) if fast else (4000, 64, 28)
+
+
+def make_contention_setup(fast: bool = False, seed: int = 0):
+    """The 3-job contention scenario: two weight-1 trainers saturate the
+    8-node pool from t=0; a priority-1 server arrives at t=8 with an
+    instantaneous burst plus a Poisson stream, preempting the trainers
+    down to their fair share until its backlog drains."""
+    n, f, iters = workload_sizes(fast)
+    burst_n, stream_n = (6, 6) if fast else (10, 10)
+    t1 = cocoa_train_job("trainA", iterations=iters, k_tasks=8,
+                         n=n, f=f, chunk=50, seed=seed)
+    t2 = cocoa_train_job("trainB", iterations=iters, k_tasks=8,
+                         n=n, f=f, chunk=50, seed=seed + 1)
+    cfg = smoke_variant(get_config("smollm-360m"))
+    srv = ServeJob(JobSpec("svc", "serve", weight=1.0, priority=1,
+                           max_nodes=4),
+                   cfg, capacity=8, cache_len=32, prefill_bucket=8,
+                   slots_per_node=2, ticks_per_dt=2.0, seed=seed)
+    trace = ClusterTrace([
+        arrive(0.0, "trainA"),
+        arrive(0.0, "trainB"),
+        arrive(8.0, "svc"),
+        burst(8.0, "svc", burst_n, prompt_len=[6, 12],
+              max_new_tokens=[4, 8], tenant="burst", seed=seed + 2),
+        burst(12.0, "svc", stream_n, rate=2.0, prompt_len=[6, 12],
+              max_new_tokens=[4, 8], tenant="stream", seed=seed + 3),
+    ])
+    pool = DevicePool(8)
+    return pool, [t1, t2, srv], trace
+
+
+def solo_curve(name: str, iterations: int, *, n: int, f: int,
+               seed: int) -> list:
+    """The same trainer alone on an idle 8-node pool (reference curve)."""
+    job = cocoa_train_job(name, iterations=iterations, k_tasks=8,
+                          n=n, f=f, chunk=50, seed=seed)
+    orch = ClusterOrchestrator(DevicePool(8), [job],
+                               ClusterTrace([arrive(0.0, name)]),
+                               dt=1.0, max_ticks=4 * iterations + 16)
+    orch.run()
+    return job.loss_curve()
+
+
+def run(fast: bool = False, dry_run: bool = False, seed: int = 0) -> dict:
+    n, f, iters = workload_sizes(fast)
+    pool, jobs, trace = make_contention_setup(fast=fast, seed=seed)
+    orch = ClusterOrchestrator(pool, jobs, trace,
+                               allocator=FairShareAllocator(),
+                               dt=1.0, max_ticks=8 if dry_run else 2000)
+    rep = orch.run()
+
+    t1, t2, srv = jobs
+    loss_match = {}
+    if not dry_run:
+        for job, s in ((t1, seed), (t2, seed + 1)):
+            ref = solo_curve(job.spec.name, iters, n=n, f=f, seed=s)
+            loss_match[job.spec.name] = (job.loss_curve() == ref)
+
+    svc = rep.jobs["svc"].get("serve", {})
+    rec = {
+        "bench": "cluster_bench",
+        "fast": fast,
+        "dry_run": dry_run,
+        "pool_nodes": pool.n_nodes,
+        "n_jobs": len(jobs),
+        "makespan": rep.makespan,
+        "utilization": rep.utilization,
+        "fairness_jain": rep.fairness_jain,
+        "preemptions": rep.preemptions,
+        "migrations": rep.migrations,
+        "ticks": rep.ticks,
+        "trainer_iterations": {j.spec.name: j.iterations_done
+                               for j in (t1, t2)},
+        "loss_curves_match_solo": loss_match,
+        "serve_requests_finished": svc.get("requests_finished"),
+        "serve_requests_total": rep.jobs["svc"].get("expected_requests"),
+        "serve_queue_delay_p50_s": svc.get("queue_delay_p50_s"),
+        "serve_ttft_p50_s": svc.get("ttft_p50_s"),
+        "per_job": {name: {k: j.get(k) for k in
+                           ("state", "node_time", "presence_time",
+                            "normalized_share", "preemptions",
+                            "queueing_delay")}
+                    for name, j in rep.jobs.items()},
+    }
+    if not dry_run:
+        assert rep.utilization >= 0.85, \
+            f"aggregate utilization {rep.utilization:.3f} < 0.85"
+        assert rep.fairness_jain >= 0.9, \
+            f"Jain fairness {rep.fairness_jain:.3f} < 0.9"
+        assert rep.preemptions >= 1, "serve burst should preempt a trainer"
+        assert all(loss_match.values()), \
+            f"trainer curve diverged from solo run: {loss_match}"
+        assert (svc.get("requests_finished")
+                == rep.jobs["svc"]["expected_requests"]), "dropped requests"
+    return rec
+
+
+def main(fast: bool = False) -> None:
+    """Entry point for benchmarks.run registration."""
+    print(json.dumps(run(fast=fast)))
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="build + a few ticks only (CI wiring check)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="append record to this file")
+    args = ap.parse_args()
+    rec = run(fast=args.fast, dry_run=args.dry_run, seed=args.seed)
+    line = json.dumps(rec)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as fh:
+            fh.write(line + "\n")
+
+
+if __name__ == "__main__":
+    _cli()

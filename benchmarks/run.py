@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (ablations, fig1_parallelism, fig4_elastic,
+    from . import (ablations, cluster_bench, fig1_parallelism, fig4_elastic,
                    fig5_loadbalance, fig6_swimlane, table_baseline, roofline)
 
     benches = {
@@ -31,6 +31,7 @@ def main() -> None:
         "fig6_swimlane": fig6_swimlane.main,     # Fig 6 / 11
         "ablations": ablations.main,             # §4.4/§4.5 design knobs
         "roofline": roofline.main,               # deliverable (g)
+        "cluster_bench": cluster_bench.main,     # multi-tenant orchestration
     }
     failed = []
     for name, fn in benches.items():

@@ -12,4 +12,8 @@ echo "== serve smoke (10 requests, elastic k: 1 -> 2 -> 1) =="
 python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
     --requests 10 --seed 0
 
+echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
+python examples/cluster_mix.py --fast
+python benchmarks/cluster_bench.py --dry-run
+
 echo "smoke OK"

@@ -1,0 +1,177 @@
+"""Discrete-event cluster orchestrator: the resource-manager half of the
+paper's YARN interface, co-scheduling elastic training and serving jobs.
+
+Tick loop (fixed step `dt` of simulated seconds):
+
+  1. apply due trace events (job arrivals/departures, serve bursts),
+  2. collect per-job demands and run the weighted fair-share allocator,
+  3. convert the decision into concrete node leases (minimal churn) and
+     push resizes through each job's existing elastic path — shrinking a
+     job that still has demand is counted as a *preemption* (cheap under
+     Chicle: chunk/slot state just stops moving forward, nothing restarts),
+  4. advance every leased job by `dt`, accumulating per-job node-time,
+     presence-time, and queueing metrics.
+
+The report carries the cluster-level quantities the benchmarks track:
+makespan, aggregate utilization (leased node-time / pool node-time),
+Jain fairness over weight-normalized service rates, preemption and
+migration counts, plus per-job summaries and the full allocation timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.fairshare import jain_index
+from .allocator import FairShareAllocator, JobDemand
+from .jobs import ClusterJob, JobState, ServeJob
+from .pool import DevicePool
+from .trace import ClusterTrace
+
+
+@dataclasses.dataclass
+class TickStats:
+    t: float
+    demand: Dict[str, int]
+    alloc: Dict[str, int]
+    nodes_used: int
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    makespan: float
+    utilization: float
+    fairness_jain: float
+    preemptions: int
+    migrations: int
+    ticks: int
+    jobs: Dict[str, Dict[str, Any]]
+    timeline: List[TickStats]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)  # deep-converts TickStats too
+
+
+class ClusterOrchestrator:
+    """Owns the device pool, the trace, and the job set."""
+
+    def __init__(self, pool: DevicePool, jobs: Sequence[ClusterJob],
+                 trace: ClusterTrace, *,
+                 allocator: Optional[FairShareAllocator] = None,
+                 dt: float = 1.0, max_ticks: int = 10_000):
+        self.pool = pool
+        self.trace = trace
+        self.jobs: Dict[str, ClusterJob] = {}
+        for j in jobs:
+            if j.spec.name in self.jobs:
+                raise ValueError(f"duplicate job name {j.spec.name!r}")
+            self.jobs[j.spec.name] = j
+        for ev in trace.events:
+            if ev.job not in self.jobs:
+                raise ValueError(f"trace references unknown job {ev.job!r}")
+        self.allocator = allocator or FairShareAllocator()
+        self.dt = float(dt)
+        self.max_ticks = max_ticks
+        self.now = 0.0
+        self.timeline: List[TickStats] = []
+        self._prev_alloc: Dict[str, int] = {}
+
+    # --- event application ------------------------------------------------
+    def _apply_events(self) -> None:
+        for ev in self.trace.pop_due(self.now):
+            job = self.jobs[ev.job]
+            if ev.kind == "arrive":
+                job.arrive(self.now)
+            elif ev.kind == "depart":
+                job.depart(self.now)
+                self.pool.release_all(ev.job)
+            elif ev.kind == "burst":
+                if not isinstance(job, ServeJob):
+                    raise ValueError(
+                        f"burst event targets non-serve job {ev.job!r}")
+                payload = dict(ev.payload)
+                n = int(payload.pop("n"))
+                rate = float(payload.pop("rate", 0.0))
+                job.submit_requests(
+                    job.make_requests(ev.at, n, rate=rate, **payload))
+
+    # --- one tick ---------------------------------------------------------
+    def step(self) -> TickStats:
+        self._apply_events()
+        active = [j for j in self.jobs.values() if j.active]
+        for j in active:
+            if isinstance(j, ServeJob):
+                j.no_more_arrivals = (
+                    self.now >= self.trace.last_event_time(j.spec.name))
+
+        demands = {j.spec.name: j.demand(self.now) for j in active}
+        # priority-desc order so the pool grants fast free nodes to the
+        # most entitled jobs first
+        ordered = sorted(
+            active, key=lambda j: (-j.spec.priority, -j.spec.weight,
+                                   j.spec.name))
+        alloc = self.allocator.allocate(
+            self.pool.n_nodes,
+            [JobDemand(j.spec.name, demands[j.spec.name], j.spec.weight,
+                       j.spec.priority) for j in ordered])
+        leases = self.pool.reassign(
+            {j.spec.name: alloc.get(j.spec.name, 0) for j in ordered})
+
+        for j in ordered:
+            name = j.spec.name
+            a = alloc.get(name, 0)
+            prev = self._prev_alloc.get(name, 0)
+            if a != prev:
+                j.resizes += 1
+            if a < prev and demands[name] > a:
+                j.preemptions += 1
+            j.on_allocation(leases.get(name, []),
+                            self.pool.psts_of(leases.get(name, [])), self.now)
+
+        for j in ordered:
+            j.advance(self.dt, self.now)
+            name = j.spec.name
+            j.node_time += alloc.get(name, 0) * self.dt
+            if demands[name] > 0:
+                j.presence_time += self.dt
+            if isinstance(j, ServeJob):
+                j.maybe_finish(self.now + self.dt)
+
+        rec = TickStats(t=self.now, demand=demands,
+                        alloc={n: a for n, a in alloc.items() if a},
+                        nodes_used=sum(alloc.values()))
+        self.timeline.append(rec)
+        self._prev_alloc = alloc
+        self.now += self.dt
+        return rec
+
+    # --- drive to completion ----------------------------------------------
+    def _work_remains(self) -> bool:
+        if not self.trace.exhausted:
+            return True
+        return any(j.active for j in self.jobs.values())
+
+    def run(self) -> ClusterReport:
+        while self._work_remains() and len(self.timeline) < self.max_ticks:
+            self.step()
+        return self.report()
+
+    def report(self) -> ClusterReport:
+        finish_times = [j.finish_time for j in self.jobs.values()
+                        if j.finish_time is not None]
+        makespan = max(finish_times) if finish_times else self.now
+        span_ticks = [t for t in self.timeline if t.t < makespan]
+        used = sum(t.nodes_used for t in span_ticks)
+        total = self.pool.n_nodes * len(span_ticks)
+        rates = [j.node_time / (j.spec.weight * j.presence_time)
+                 for j in self.jobs.values() if j.presence_time > 0]
+        return ClusterReport(
+            makespan=makespan,
+            utilization=used / total if total else 0.0,
+            fairness_jain=jain_index(rates),
+            preemptions=sum(j.preemptions for j in self.jobs.values()),
+            migrations=self.pool.migrations,
+            ticks=len(self.timeline),
+            jobs={n: j.summary() for n, j in self.jobs.items()},
+            timeline=self.timeline,
+        )

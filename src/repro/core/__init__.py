@@ -11,6 +11,12 @@ from .engine import (
     microtask_schedule_len,
     time_to_target,
 )
+from .fairshare import (
+    integerize_shares,
+    jain_index,
+    stride_pick,
+    weighted_max_min,
+)
 from .local_sgd import LocalSGDSolver
 from .policies import (
     ElasticScalingPolicy,
@@ -27,4 +33,5 @@ __all__ = [
     "epochs_to_target", "microtask_schedule_len", "time_to_target",
     "LocalSGDSolver", "ElasticScalingPolicy", "Policy", "RebalancePolicy",
     "ScaleEvent", "ShufflePolicy", "StragglerMitigationPolicy",
+    "integerize_shares", "jain_index", "stride_pick", "weighted_max_min",
 ]

@@ -60,6 +60,9 @@ class IterationRecord:
     n_workers: int
     task_times: Dict[int, float]
     chunk_counts: List[int]
+    # scale decisions applied by policies in this iteration's scheduler
+    # phase, as (sim_time, k_before, k_after) — benchmark plot markers
+    events: List = dataclasses.field(default_factory=list)
 
 
 class UniTaskEngine:
@@ -135,6 +138,7 @@ class UniTaskEngine:
                 n_workers=K,
                 task_times=task_times,
                 chunk_counts=[len(c) for c in self.assignment.workers],
+                events=list(stats.get("scale_events", [])),
             ))
         return self.history
 

@@ -29,19 +29,39 @@ class ScaleEvent:
 class ElasticScalingPolicy(Policy):
     """Scale the worker set according to a resource-manager schedule.
 
-    The paper interfaces with YARN; here the 'resource manager' is a schedule
-    of (time, node-count) events (benchmarks replay the paper's 2-nodes-every-
-    20s scale-in/out), or a callable for dynamic decisions.  On scale-out,
-    chunks are picked randomly from old workers (the paper notes this
-    *shuffles* data and helps CoCoA); on scale-in, revoked workers' chunks
-    are redistributed round-robin.
+    The paper interfaces with YARN; here the 'resource manager' is either a
+    schedule of (time, node-count) events (benchmarks replay the paper's
+    2-nodes-every-20s scale-in/out) or a callable ``t -> target`` for
+    dynamic decisions (e.g. `repro.cluster`'s fair-share allocator; the
+    callable may return None for "no opinion right now").  Constructing the
+    policy with an empty event list and no callable is a silent no-op and
+    therefore raises.  On scale-out, chunks are picked randomly from old
+    workers (the paper notes this *shuffles* data and helps CoCoA); on
+    scale-in, revoked workers' chunks are redistributed round-robin.
+
+    Every APPLIED scale decision is appended to ``stats['scale_events']`` as
+    ``(sim_time, k_before, k_after)``; `UniTaskEngine` copies these into the
+    iteration's `IterationRecord.events` so benchmarks can plot decision
+    points against the convergence curve.
     """
 
-    def __init__(self, schedule: Sequence[ScaleEvent], rng=None):
-        self.schedule = sorted(schedule, key=lambda e: e.at_time)
+    def __init__(self, schedule, rng=None):
+        if callable(schedule):
+            self._fn = schedule
+            self.schedule: List[ScaleEvent] = []
+        else:
+            self._fn = None
+            self.schedule = sorted(schedule or [], key=lambda e: e.at_time)
+            if not self.schedule:
+                raise ValueError(
+                    "ElasticScalingPolicy with an empty event schedule and "
+                    "no callable never fires; pass events or a callable")
         self.rng = rng  # None -> engine.rng at decision time
 
     def target_workers(self, t: float) -> Optional[int]:
+        if self._fn is not None:
+            tgt = self._fn(t)
+            return None if tgt is None else int(tgt)
         n = None
         for ev in self.schedule:
             if ev.at_time <= t:
@@ -52,6 +72,9 @@ class ElasticScalingPolicy(Policy):
         tgt = self.target_workers(engine.sim_time)
         if tgt is None or tgt == engine.assignment.n_workers:
             return
+        k_before = engine.assignment.n_workers
+        stats.setdefault("scale_events", []).append(
+            (float(engine.sim_time), k_before, int(tgt)))
         a = engine.assignment
         rng = self.rng if self.rng is not None else \
             getattr(engine, "rng", None) or chunks.default_rng()

@@ -51,6 +51,7 @@ class ElasticTrainer:
         self._cache: Dict[int, Tuple] = {}
         self.k = 0
         self.mesh: Optional[Mesh] = None
+        self.suspended = False
         self.resize(len(self.devices))
 
     def _build(self, k: int):
@@ -61,8 +62,9 @@ class ElasticTrainer:
 
     def resize(self, k: int) -> None:
         k = max(1, min(k, len(self.devices)))
-        if k == self.k:
+        if k == self.k and not self.suspended:
             return
+        self.suspended = False
         if k not in self._cache:
             self._cache[k] = self._build(k)
         mesh, rules, step = self._cache[k]
@@ -74,7 +76,26 @@ class ElasticTrainer:
         self.opt_state = jax.device_put(self.opt_state, spec)
         self.k, self.mesh, self.rules, self.step = k, mesh, rules, step
 
+    def suspend(self) -> None:
+        """Full revocation (cluster scale-to-zero): pull training state to
+        host memory, releasing every device lease; `resume(k)` re-shards it
+        onto whatever devices come back.  The round-trip is bit-exact —
+        training continues as if never interrupted."""
+        if self.suspended:
+            return
+        self.params = jax.device_get(self.params)
+        self.opt_state = jax.device_get(self.opt_state)
+        self.suspended = True
+        self.k = 0
+        self.mesh = None
+
+    def resume(self, k: int) -> None:
+        self.resize(k)
+
     def train_step(self, batch: Dict) -> Dict:
+        if self.suspended:
+            raise RuntimeError("ElasticTrainer is suspended; call resume(k) "
+                               "before stepping")
         def shard_for(v):
             spec = P("data") if v.shape[0] % self.k == 0 else P()
             return NamedSharding(self.mesh, spec)

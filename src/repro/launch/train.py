@@ -151,7 +151,8 @@ def train(arch: str, *, scale: Optional[str] = None, smoke: bool = False,
             loss = float(metrics["loss"])
             history.append({"step": it, "loss": loss,
                             "workers": assignment.n_workers,
-                            "sim_time": sim_time})
+                            "sim_time": sim_time,
+                            "events": list(stats.get("scale_events", []))})
             if it % log_every == 0 or it == train_steps - 1:
                 print(f"step {it:4d} loss {loss:8.4f} "
                       f"workers {assignment.n_workers:2d} "

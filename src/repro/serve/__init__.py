@@ -6,14 +6,17 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
 
 - `request`   — request/sequence lifecycle + Poisson/trace arrival traces
 - `slots`     — fixed-capacity slotted KV pool (alloc/free, pad-to-slot)
-- `scheduler` — admission control + prefill/decode interleaving over an
-                elastic worker pool, reusing `core.chunks.Assignment` and
-                `core.policies` (the slot-chunk -> worker map obeys the same
-                scheduler-phase ownership contract as training chunks)
+- `scheduler` — per-tenant weighted round-robin admission + prefill/decode
+                interleaving over an elastic worker pool, reusing
+                `core.chunks.Assignment` and `core.policies` (the
+                slot-chunk -> worker map obeys the same scheduler-phase
+                ownership contract as training chunks)
 - `engine`    — `ServeEngine`: carries KV state across `resize(k)` events
                 (per-k jit cache + device_put resharding, mirroring
-                `launch.elastic.ElasticTrainer`) and records TTFT /
-                per-token latency / throughput / occupancy
+                `launch.elastic.ElasticTrainer`), supports suspend/resume
+                (cluster scale-to-zero) and an injected simulation clock,
+                and records TTFT / per-token latency / throughput /
+                occupancy / queueing delay
 """
 from .engine import ServeEngine, ServeMetrics
 from .request import (Request, RequestState, poisson_arrivals,

@@ -56,12 +56,16 @@ class ServeMetrics:
     ticks: List[TickRecord] = dataclasses.field(default_factory=list)
     scale_events: List[Tuple[int, int, int]] = dataclasses.field(
         default_factory=list)  # (tick, k_before, k_after)
+    suspend_events: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)  # (tick, "suspend" | "resume")
     wall_s: float = 0.0
 
     def summarize(self) -> Dict[str, Any]:
         done = [r for r in self.requests if r.state is RequestState.FINISHED]
         ttfts = np.array([r.ttft() for r in done if r.ttft() is not None])
         tpots = np.array([r.tpot() for r in done if r.tpot() is not None])
+        qdel = np.array([r.t_admitted - r.arrival_time for r in done
+                         if r.t_admitted is not None])
         toks = sum(r.n_generated for r in done)
         pct = (lambda a, q: float(np.percentile(a, q)) if len(a) else None)
         occ = np.array([t.occupancy for t in self.ticks])
@@ -72,9 +76,12 @@ class ServeMetrics:
             "tokens_per_s": toks / self.wall_s if self.wall_s else 0.0,
             "ttft_p50_s": pct(ttfts, 50), "ttft_p99_s": pct(ttfts, 99),
             "tpot_p50_s": pct(tpots, 50), "tpot_p99_s": pct(tpots, 99),
+            "queue_delay_p50_s": pct(qdel, 50),
+            "queue_delay_p99_s": pct(qdel, 99),
             "occupancy_mean": float(occ.mean()) if len(occ) else 0.0,
             "n_ticks": len(self.ticks),
             "scale_events": [list(e) for e in self.scale_events],
+            "suspend_events": [list(e) for e in self.suspend_events],
             "wall_s": self.wall_s,
         }
 
@@ -86,7 +93,9 @@ class ServeEngine:
                  cache_len: int = 64, prefill_bucket: int = 16,
                  n_workers: int = 1, policies: Sequence = (),
                  slots_per_chunk: int = 2, max_admit_per_tick: int = 4,
-                 seed: int = 0, params: Optional[Any] = None):
+                 seed: int = 0, params: Optional[Any] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 clock: Optional[Any] = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServeEngine supports flat-KV families {SUPPORTED_FAMILIES}; "
@@ -102,7 +111,10 @@ class ServeEngine:
         self.scheduler = SlotScheduler(
             capacity, n_workers=n_workers, slots_per_chunk=slots_per_chunk,
             policies=policies, max_admit_per_tick=max_admit_per_tick,
-            seed=seed)
+            seed=seed, tenant_weights=tenant_weights)
+        # external simulation clock (cluster orchestrator); None = wall clock
+        self._clock = clock
+        self.suspended = False
 
         cache = M.init_cache(cfg, capacity, cache_len, per_slot=True)
         self.blocks = cache["blocks"]
@@ -227,8 +239,24 @@ class ServeEngine:
                 self.scheduler.pool.pos[r.slot] = r.prompt_len
                 self._by_slot[r.slot] = r
 
+    # --- suspend / resume (cluster scale-to-zero) -------------------------
+    def suspend(self) -> None:
+        """Scale-to-zero: stop ticking; KV pool, queues, and in-flight
+        request state stay intact (the slot-chunk analogue of parking a
+        trainer's chunks — resume continues the exact token streams)."""
+        if not self.suspended:
+            self.suspended = True
+            self.metrics.suspend_events.append((self._tick, "suspend"))
+
+    def resume(self) -> None:
+        if self.suspended:
+            self.suspended = False
+            self.metrics.suspend_events.append((self._tick, "resume"))
+
     # --- main loop --------------------------------------------------------
     def _now(self) -> float:
+        if self._clock is not None:
+            return float(self._clock())
         if self._t0 is None:
             self._t0 = time.perf_counter()
         return time.perf_counter() - self._t0
@@ -245,6 +273,9 @@ class ServeEngine:
             self.metrics.requests.append(r)
 
     def tick(self) -> TickRecord:
+        if self.suspended:
+            raise RuntimeError("ServeEngine is suspended; call resume() "
+                               "before ticking")
         now = self._now()
         sched = self.scheduler
 
@@ -314,12 +345,16 @@ class ServeEngine:
     def run(self, requests: Sequence[Request], *,
             max_ticks: int = 100_000) -> ServeMetrics:
         """Drive the open-loop workload to completion."""
+        if self._clock is not None:
+            raise ValueError("run() paces on the wall clock; with an "
+                             "injected clock drive tick() externally "
+                             "(see repro.cluster.jobs.ServeJob)")
         self.submit(requests)
         self._now()  # start the clock
         sched = self.scheduler
-        while (sched.pending or self._by_slot) and self._tick < max_ticks:
-            if not self._by_slot and sched.pending:
-                wait = sched.pending[0].arrival_time - self._now()
+        while (sched.has_pending or self._by_slot) and self._tick < max_ticks:
+            if not self._by_slot and sched.has_pending:
+                wait = sched.next_arrival() - self._now()
                 if wait > 0:  # idle until the next open-loop arrival
                     time.sleep(min(wait, 0.05))
             with set_mesh(self.mesh):  # re-entered so resize(k) takes effect

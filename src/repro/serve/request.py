@@ -29,6 +29,7 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
     arrival_time: float = 0.0  # seconds from workload start (open loop)
+    tenant: str = "default"  # admission queue key (per-tenant fair sharing)
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
@@ -85,8 +86,9 @@ def trace_arrivals(offsets: Sequence[float]) -> np.ndarray:
 def synthetic_requests(n: int, *, vocab_size: int, arrivals: np.ndarray,
                        prompt_len: tuple = (8, 32),
                        max_new_tokens: tuple = (4, 16),
-                       rng: Optional[np.random.Generator] = None
-                       ) -> List[Request]:
+                       rng: Optional[np.random.Generator] = None,
+                       tenant: str = "default",
+                       rid_base: int = 0) -> List[Request]:
     """Random-token requests with lengths drawn uniformly from the given
     inclusive ranges, stamped with the supplied arrival offsets."""
     rng = rng or np.random.default_rng(0)
@@ -96,6 +98,7 @@ def synthetic_requests(n: int, *, vocab_size: int, arrivals: np.ndarray,
         lp = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
         mn = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
         prompt = rng.integers(0, vocab_size, size=lp).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mn,
+        reqs.append(Request(rid=rid_base + i, prompt=prompt,
+                            max_new_tokens=mn, tenant=tenant,
                             arrival_time=float(arrivals[i])))
     return reqs

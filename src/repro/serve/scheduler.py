@@ -17,19 +17,25 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.chunks import Assignment, ChunkStore
+from ..core.fairshare import stride_pick
 from ..core.policies import Policy
 from .request import Request, RequestState
 from .slots import SlotPool
 
 
 class SlotScheduler:
-    """Owns the pending queue, the slot pool, and the slot-chunk assignment."""
+    """Owns the per-tenant pending queues, the slot pool, and the slot-chunk
+    assignment.  Admission is weighted round-robin across tenants (stride
+    scheduling on admitted-count/weight, the same weight semantics as the
+    cluster allocator's `JobDemand.weight`); within a tenant it is FCFS by
+    arrival.  A single tenant degrades to the original global FCFS."""
 
     def __init__(self, capacity: int, *, n_workers: int = 1,
                  slots_per_chunk: int = 2,
                  policies: Sequence[Policy] = (),
                  max_admit_per_tick: int = 4,
                  seed: int = 0,
+                 tenant_weights: Optional[Dict[str, float]] = None,
                  on_worker_added: Optional[Callable[[int], None]] = None,
                  on_worker_removed: Optional[Callable[[int], None]] = None):
         self.pool = SlotPool(capacity)
@@ -43,7 +49,9 @@ class SlotScheduler:
         self.policies = list(policies)
         self.max_admit_per_tick = max_admit_per_tick
         self.sim_time = 0.0  # tick index; policies key scale events on it
-        self.pending: List[Request] = []  # kept sorted by arrival_time
+        self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
+        self._queues: Dict[str, List[Request]] = {}  # tenant -> FCFS queue
+        self._admitted: Dict[str, float] = {}  # tenant -> admitted count
         self._hook_added = on_worker_added or (lambda w: None)
         self._hook_removed = on_worker_removed or (lambda w: None)
 
@@ -82,17 +90,69 @@ class SlotScheduler:
                          for w in range(self.n_workers)])
 
     # --- scheduler phase (between iterations only) ------------------------
+    @property
+    def pending(self) -> List[Request]:
+        """All queued requests, merged across tenants, sorted by arrival."""
+        merged = [r for q in self._queues.values() for r in q]
+        merged.sort(key=lambda r: r.arrival_time)
+        return merged
+
+    @property
+    def has_pending(self) -> bool:
+        """O(#tenants) emptiness check (the `pending` merge is O(N log N))."""
+        return any(self._queues.values())
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest queued arrival time, min over per-tenant heads."""
+        heads = [q[0].arrival_time for q in self._queues.values() if q]
+        return min(heads) if heads else None
+
+    def pending_of(self, tenant: str) -> List[Request]:
+        return list(self._queues.get(tenant, []))
+
+    def n_arrived(self, now: float) -> int:
+        """Queued requests whose arrival time has passed (demand signal)."""
+        return sum(1 for q in self._queues.values()
+                   for r in q if r.arrival_time <= now)
+
+    def _vtime(self, tenant: str) -> float:
+        return (self._admitted.get(tenant, 0.0)
+                / self.tenant_weights.get(tenant, 1.0))
+
     def submit(self, req: Request) -> None:
-        # sorted insertion keeps FCFS-by-arrival across multiple submit calls
-        bisect.insort(self.pending, req, key=lambda r: r.arrival_time)
+        q = self._queues.setdefault(req.tenant, [])
+        if not q:
+            # (re)joining the backlog: floor the tenant's virtual time at
+            # the least-served backlogged tenant so a newcomer competes for
+            # its fair share going FORWARD rather than monopolizing
+            # admissions until its historical count catches up
+            vts = [self._vtime(t) for t, qq in self._queues.items() if qq]
+            if vts:
+                w = self.tenant_weights.get(req.tenant, 1.0)
+                self._admitted[req.tenant] = max(
+                    self._admitted.get(req.tenant, 0.0), min(vts) * w)
+        # sorted insertion keeps FCFS-by-arrival within each tenant queue
+        bisect.insort(q, req, key=lambda r: r.arrival_time)
 
     def admit(self, now: float) -> List[Request]:
-        """Admit arrived requests into free slots (FCFS, bounded per tick)."""
+        """Admit arrived requests into free slots: weighted round-robin over
+        tenants with an arrived head-of-line request (stride pick on
+        admitted/weight, exact ties broken by the earliest waiting head so
+        equal-weight tenants stay FCFS-fair), FCFS within a tenant, bounded
+        by free slots and `max_admit_per_tick`."""
         admitted: List[Request] = []
-        while (self.pending and self.pool.n_free
-               and len(admitted) < self.max_admit_per_tick
-               and self.pending[0].arrival_time <= now):
-            req = self.pending.pop(0)
+        while self.pool.n_free and len(admitted) < self.max_admit_per_tick:
+            eligible = [t for t, q in self._queues.items()
+                        if q and q[0].arrival_time <= now]
+            if not eligible:
+                break
+            tenant = stride_pick(
+                self._admitted, self.tenant_weights, eligible,
+                tiebreak=lambda t: self._queues[t][0].arrival_time)
+            req = self._queues[tenant].pop(0)
+            if not self._queues[tenant]:
+                del self._queues[tenant]
+            self._admitted[tenant] = self._admitted.get(tenant, 0.0) + 1.0
             req.slot = self.pool.alloc(req.rid)
             req.state = RequestState.PREFILL
             req.t_admitted = now

@@ -28,6 +28,85 @@ def test_elastic_trainer_state_survives_resize():
     assert float(jnp.max(jnp.abs(p_after - p_before))) > 0  # kept training
 
 
+def test_elastic_trainer_suspend_resume_bit_identical():
+    """Scale-to-zero on the REAL training path: park params/opt state on
+    host mid-run, resume, and land bit-identical to an uninterrupted run
+    fed the same batches."""
+    cfg = smoke_variant(get_config("smollm-360m"))
+    tc = TrainConfig(learning_rate=5e-3, remat=False)
+    data = make_lm_tokens(64, 32, cfg.vocab_size, seed=0)
+
+    def batch(i):
+        sl = slice(4 * i, 4 * (i + 1))
+        return {"tokens": jnp.asarray(data["tokens"][sl]),
+                "labels": jnp.asarray(data["labels"][sl]),
+                "weights": jnp.ones((4,), jnp.float32)}
+
+    ref = ElasticTrainer(cfg, tc)
+    for i in range(4):
+        ref.train_step(batch(i))
+
+    bumpy = ElasticTrainer(cfg, tc)
+    bumpy.train_step(batch(0))
+    bumpy.train_step(batch(1))
+    bumpy.suspend()
+    assert bumpy.suspended and bumpy.k == 0
+    with np.testing.assert_raises(RuntimeError):
+        bumpy.train_step(batch(2))
+    host_leaf = jax.tree.leaves(bumpy.params)[0]
+    assert isinstance(host_leaf, np.ndarray)  # state parked off-device
+    bumpy.resume(1)
+    assert not bumpy.suspended and bumpy.k == 1
+    bumpy.train_step(batch(2))
+    bumpy.train_step(batch(3))
+
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(bumpy.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_suspend_resume_bit_identical_params():
+    """A trainer squeezed to ZERO nodes mid-run and later restored must
+    produce bit-identical parameters (CoCoA's w and the in-chunk dual state
+    alpha) to an uninterrupted run at the same data order — suspension
+    parks the chunks, it never perturbs the algorithm."""
+    from repro.cluster import cocoa_train_job
+
+    def make():
+        return cocoa_train_job("t", iterations=8, k_tasks=4,
+                               n=400, f=8, chunk=20, seed=3)
+
+    solo = make()
+    solo.arrive(0.0)
+    solo.on_allocation([0, 1, 2, 3], [1.0] * 4, 0.0)
+    while solo.iterations_done < solo.iterations:
+        solo.advance(1.0, float(solo.iterations_done))
+
+    bumpy = make()
+    bumpy.arrive(0.0)
+    bumpy.on_allocation([0, 1, 2, 3], [1.0] * 4, 0.0)
+    bumpy.advance(3.0, 0.0)  # a few iterations in...
+    done_before = bumpy.iterations_done
+    assert 0 < done_before < bumpy.iterations
+    bumpy.on_allocation([], [], 3.0)  # ...scaled to zero (preempted)
+    for t in range(3, 6):
+        bumpy.advance(1.0, float(t))  # suspended: time passes, no progress
+    assert bumpy.iterations_done == done_before
+    bumpy.on_allocation([5, 6], [1.0, 1.0], 6.0)  # restored, fewer nodes
+    t = 6.0
+    while bumpy.iterations_done < bumpy.iterations:
+        bumpy.advance(1.0, t)
+        t += 1.0
+
+    assert bumpy.iterations_done == solo.iterations_done
+    assert solo.loss_curve() == bumpy.loss_curve()
+    assert np.array_equal(solo.solver.store.state["alpha"],
+                          bumpy.solver.store.state["alpha"])
+    assert np.array_equal(np.asarray(solo.solver.w),
+                          np.asarray(bumpy.solver.w))
+    # but the clock tells the true story: the bumpy run took longer
+    assert bumpy.engine.sim_time > solo.engine.sim_time
+
+
 def test_convergence_tracker():
     t = ConvergenceTracker(higher_is_better=False)
     for i, m in enumerate([0.5, 0.3, 0.1, 0.05]):

@@ -120,6 +120,80 @@ def test_admission_respects_capacity_and_arrival():
     assert [r.rid for r in s.admit(now=1.0)] == [2]  # FCFS; rid 3 not arrived
 
 
+def test_per_tenant_weighted_round_robin_admission():
+    """Two backlogged tenants with 3:1 weights are admitted ~3:1; within a
+    tenant admission stays FCFS by arrival."""
+    s = SlotScheduler(8, n_workers=1, max_admit_per_tick=8,
+                      tenant_weights={"gold": 3.0, "free": 1.0})
+    gold = synthetic_requests(6, vocab_size=64, arrivals=np.arange(6) * 1e-3,
+                              tenant="gold")
+    free = synthetic_requests(6, vocab_size=64, arrivals=np.arange(6) * 1e-3,
+                              tenant="free", rid_base=100)
+    for r in gold + free:
+        s.submit(r)
+    admitted = s.admit(now=1.0)
+    assert len(admitted) == 8
+    tenants = [r.tenant for r in admitted]
+    assert tenants.count("gold") == 6 and tenants.count("free") == 2
+    # FCFS within each tenant
+    for t in ("gold", "free"):
+        rids = [r.rid for r in admitted if r.tenant == t]
+        assert rids == sorted(rids)
+
+
+def test_single_tenant_degrades_to_fcfs():
+    """Without tenant structure the WRR queue is exactly the old FCFS."""
+    s = SlotScheduler(4, n_workers=1, max_admit_per_tick=8)
+    reqs = synthetic_requests(3, vocab_size=64,
+                              arrivals=np.array([0.3, 0.1, 0.2]))
+    for r in reqs:
+        s.submit(r)
+    assert [r.arrival_time for r in s.pending] == [0.1, 0.2, 0.3]
+    assert [r.arrival_time for r in s.admit(now=1.0)] == [0.1, 0.2, 0.3]
+
+
+def test_late_joining_tenant_cannot_monopolize_admissions():
+    """A tenant joining after the scheduler has served others for a while
+    starts from the field's virtual time: it competes for its fair share
+    going forward instead of back-filling its historical deficit."""
+    s = SlotScheduler(2, n_workers=1, max_admit_per_tick=2)
+    # tenant a alone gets 20 admissions served and released
+    for i in range(10):
+        for r in synthetic_requests(2, vocab_size=64, arrivals=np.zeros(2),
+                                    tenant="a", rid_base=10 * i):
+            s.submit(r)
+        for r in s.admit(now=1.0):
+            s.release(r, now=1.0)
+    # now both tenants are backlogged; b must NOT win every pick
+    for r in synthetic_requests(8, vocab_size=64, arrivals=np.zeros(8),
+                                tenant="a", rid_base=500):
+        s.submit(r)
+    for r in synthetic_requests(8, vocab_size=64, arrivals=np.zeros(8),
+                                tenant="b", rid_base=600):
+        s.submit(r)
+    picks = []
+    for _ in range(4):
+        batch = s.admit(now=2.0)
+        picks += [r.tenant for r in batch]
+        for r in batch:
+            s.release(r, now=2.0)
+    assert picks.count("a") == 4 and picks.count("b") == 4
+
+
+def test_unweighted_tenants_share_evenly():
+    """Tenants absent from tenant_weights default to weight 1.0 and
+    interleave fairly instead of one starving the other."""
+    s = SlotScheduler(8, n_workers=1, max_admit_per_tick=4)
+    a = synthetic_requests(4, vocab_size=64, arrivals=np.zeros(4),
+                           tenant="a")
+    b = synthetic_requests(4, vocab_size=64, arrivals=np.zeros(4),
+                           tenant="b", rid_base=10)
+    for r in a + b:
+        s.submit(r)
+    tenants = [r.tenant for r in s.admit(now=1.0)]
+    assert tenants.count("a") == 2 and tenants.count("b") == 2
+
+
 # ---------------------------------------------------------------------------
 # Vectorized per-slot decode == per-request scalar decode
 # ---------------------------------------------------------------------------
