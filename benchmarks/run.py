@@ -21,7 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (ablations, cluster_bench, fig1_parallelism, fig4_elastic,
-                   fig5_loadbalance, fig6_swimlane, table_baseline, roofline)
+                   fig5_loadbalance, fig6_swimlane, serve_bench,
+                   table_baseline, roofline)
 
     benches = {
         "table_baseline": table_baseline.main,   # §5.2 / A.1
@@ -32,6 +33,7 @@ def main() -> None:
         "ablations": ablations.main,             # §4.4/§4.5 design knobs
         "roofline": roofline.main,               # deliverable (g)
         "cluster_bench": cluster_bench.main,     # multi-tenant orchestration
+        "serve_bench": serve_bench.main,         # serving + paged-vs-flat A/B
     }
     failed = []
     for name, fn in benches.items():

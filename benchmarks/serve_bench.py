@@ -1,8 +1,19 @@
 """Serving hot-path benchmark: open-loop continuous batching on the smoke
-config, emitting ONE JSON perf record (tokens/s, p50/p99 TTFT/TPOT) so
-future PRs can track the serving path.
+config, emitting JSON perf records so future PRs can track the serving path.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--out serve_bench.json]
+Two modes:
+
+- default: one elastic engine run (tokens/s, p50/p99 TTFT/TPOT).
+- ``--ab``: paged-vs-flat A/B on a mixed long/short-prompt workload — the
+  same request trace drives a flat-KV engine (whole-pool admission scatter,
+  full-cache_len decode attention) and a paged engine (block tables,
+  O(pages) admission, chunked prefill).  The record carries admission bytes
+  moved, per-tick decode time, and page occupancy for both arms: the paged
+  arm must move admitted-request-proportional bytes and decode faster per
+  tick at equal token output.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--ab] [--fast]
+        [--dry-run] [--out serve_bench.json]
 """
 from __future__ import annotations
 
@@ -18,7 +29,7 @@ from repro.serve import ServeEngine, poisson_arrivals, synthetic_requests
 
 def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
         capacity: int = 8, cache_len: int = 64, elastic: bool = True,
-        seed: int = 0) -> dict:
+        kv_layout: str = "flat", seed: int = 0) -> dict:
     cfg = smoke_variant(get_config(arch))
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(requests, rate, rng=rng)
@@ -31,7 +42,7 @@ def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
             [ScaleEvent(0, 1), ScaleEvent(10, 2), ScaleEvent(20, 1)]))
     engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
                          prefill_bucket=16, n_workers=1, policies=policies,
-                         seed=seed)
+                         kv_layout=kv_layout, seed=seed)
     summary = engine.run(reqs).summarize()
     ticks = engine.metrics.ticks
     decode = np.array([t.decode_s for t in ticks if t.decode_s > 0])
@@ -42,6 +53,7 @@ def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
         "rate_req_s": rate,
         "capacity": capacity,
         "elastic": elastic,
+        "kv_layout": kv_layout,
         "tokens_per_s": summary["tokens_per_s"],
         "ttft_p50_s": summary["ttft_p50_s"],
         "ttft_p99_s": summary["ttft_p99_s"],
@@ -55,23 +67,141 @@ def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
     }
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# Paged-vs-flat A/B on a mixed long/short-prompt workload
+# ---------------------------------------------------------------------------
+
+
+def _mixed_workload(cfg, *, fast: bool, seed: int):
+    """Half long prompts, half short, on a cache sized with decode headroom
+    (the flat pool's worst case: every decode tick attends the full
+    cache_len for everyone, while the paged pool attends only pages live in
+    the batch)."""
+    if fast:
+        n_long, n_short = 4, 4
+        long_p, short_p, max_new, rate = (96, 144), (8, 24), (4, 8), 50.0
+    else:
+        n_long, n_short = 10, 10
+        long_p, short_p, max_new, rate = (96, 160), (8, 24), (8, 16), 30.0
+    rng = np.random.default_rng(seed)
+    longs = synthetic_requests(
+        n_long, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(n_long, rate, rng=rng),
+        prompt_len=long_p, max_new_tokens=max_new, rng=rng)
+    shorts = synthetic_requests(
+        n_short, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(n_short, rate, rng=rng),
+        prompt_len=short_p, max_new_tokens=max_new, rng=rng,
+        rid_base=1000)
+    return longs + shorts
+
+
+def _arm_summary(engine) -> dict:
+    s = engine.metrics.summarize()
+    decode = np.array([t.decode_s for t in engine.metrics.ticks
+                       if t.decode_s > 0])
+    return {
+        "tokens_generated": s["tokens_generated"],
+        "requests_finished": s["requests_finished"],
+        "decode_step_p50_s": float(np.percentile(decode, 50)) if len(decode) else None,
+        "decode_step_mean_s": float(decode.mean()) if len(decode) else None,
+        "decode_ticks": int(len(decode)),
+        "admission_bytes_total": s["admission_bytes_total"],
+        "page_occupancy_mean": s["page_occupancy_mean"],
+        "prefill_chunks_total": s["prefill_chunks_total"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "tpot_p50_s": s["tpot_p50_s"],
+        "tokens_per_s": s["tokens_per_s"],
+        "wall_s": s["wall_s"],
+    }
+
+
+def run_ab(arch: str = "smollm-360m", *, fast: bool = False,
+           dry_run: bool = False, seed: int = 0) -> dict:
+    cfg = smoke_variant(get_config(arch))
+    capacity = 4 if dry_run else 8
+    # cache_len carries decode headroom well past the longest live request
+    # (512 vs live <= ~176): flat decode pays for the headroom every tick,
+    # paged decode pays only for the power-of-two page bucket actually live
+    cache_len = 256 if dry_run else 512
+    kw = dict(capacity=capacity, cache_len=cache_len, prefill_bucket=16,
+              n_workers=1, seed=seed)
+    arms = {}
+    for layout in ("flat", "paged"):
+        engine = ServeEngine(cfg, kv_layout=layout, **kw)
+        engine.run(_mixed_workload(cfg, fast=fast or dry_run, seed=seed),
+                   max_ticks=40 if dry_run else 100_000)
+        arms[layout] = _arm_summary(engine)
+
+    f, p = arms["flat"], arms["paged"]
+    rec = {
+        "bench": "serve_bench_ab",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "capacity": capacity,
+        "cache_len": cache_len,
+        "flat": f,
+        "paged": p,
+        "tokens_equal": f["tokens_generated"] == p["tokens_generated"],
+        "decode_p50_speedup": (f["decode_step_p50_s"] / p["decode_step_p50_s"]
+                               if f["decode_step_p50_s"] and p["decode_step_p50_s"]
+                               else None),
+        "admission_bytes_ratio": (f["admission_bytes_total"]
+                                  / max(p["admission_bytes_total"], 1)),
+    }
+    if not dry_run:
+        assert rec["tokens_equal"], \
+            f"token output differs: flat {f['tokens_generated']} " \
+            f"vs paged {p['tokens_generated']}"
+        assert rec["admission_bytes_ratio"] > 2.0, \
+            f"paged admission moved too many bytes: {rec['admission_bytes_ratio']:.2f}x"
+    # wall-clock timing is load-dependent: record the claim instead of
+    # asserting it so a busy CI host can't fail the whole bench harness
+    rec["decode_speedup_ok"] = (rec["decode_p50_speedup"] or 0) > 1.0
+    if not dry_run and not rec["decode_speedup_ok"]:
+        print(f"# WARNING: paged decode p50 not faster on this run "
+              f"({rec['decode_p50_speedup']}); see BENCH_serve.json for the "
+              f"reference record")
+    return rec
+
+
+def main(fast: bool = False) -> None:
+    """Entry point for benchmarks.run registration."""
+    print(json.dumps(run(requests=8 if fast else 24)))
+    print(json.dumps(run_ab(fast=fast)))
+
+
+def _cli() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--rate", type=float, default=30.0)
     ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--kv-layout", default="flat",
+                    choices=["flat", "paged"])
     ap.add_argument("--no-elastic", action="store_true")
+    ap.add_argument("--ab", action="store_true",
+                    help="paged-vs-flat A/B on the mixed workload")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="build + a few ticks only (CI wiring check)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="append record to this file")
     args = ap.parse_args()
-    rec = run(args.arch, requests=args.requests, rate=args.rate,
-              capacity=args.capacity, elastic=not args.no_elastic)
+    if args.ab:
+        rec = run_ab(args.arch, fast=args.fast, dry_run=args.dry_run,
+                     seed=args.seed)
+    else:
+        rec = run(args.arch, requests=args.requests, rate=args.rate,
+                  capacity=args.capacity, elastic=not args.no_elastic,
+                  kv_layout=args.kv_layout, seed=args.seed)
     line = json.dumps(rec)
     print(line)
     if args.out:
-        with open(args.out, "a") as f:
-            f.write(line + "\n")
+        with open(args.out, "a") as fh:
+            fh.write(line + "\n")
 
 
 if __name__ == "__main__":
-    main()
+    _cli()

@@ -12,6 +12,12 @@ echo "== serve smoke (10 requests, elastic k: 1 -> 2 -> 1) =="
 python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
     --requests 10 --seed 0
 
+echo "== paged-attention kernel parity (Pallas interpret vs jnp oracle) =="
+python -m repro.kernels.paged_attention --selftest
+
+echo "== paged-vs-flat serve A/B (dry run) =="
+python benchmarks/serve_bench.py --ab --dry-run
+
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast
 python benchmarks/cluster_bench.py --dry-run

@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 - flash_attention: causal/sliding-window attention (VMEM-tiled online softmax)
+- paged_attention: block-table paged decode attention (scalar-prefetched
+  page chase, O(live-tokens) per sequence; `python -m
+  repro.kernels.paged_attention --selftest` for CPU interpret parity)
 - scd: CoCoA local SCD sequential solver (VMEM-resident chunks)
 - chunk_reduce: weighted uni-task update merge (bandwidth-bound reduction)
 

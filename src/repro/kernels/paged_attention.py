@@ -1,0 +1,177 @@
+"""Paged-attention decode Pallas TPU kernel (block-table gather, O(live)).
+
+One query token per sequence attends a KV cache scattered across fixed-size
+physical pages.  The block table is SCALAR-PREFETCHED
+(`pltpu.PrefetchScalarGridSpec`) so the k/v BlockSpec index_maps can chase
+it: grid step (b, h, p) DMAs exactly the physical page backing sequence b's
+p-th logical page — the kernel never touches pages the sequence does not
+own.  Pages past a sequence's live length are clamped to the last live page
+in the index_map (a repeated block index, so the pipeline skips the re-DMA)
+and their compute is skipped with `pl.when`: per-sequence work is
+O(live tokens), not O(pool capacity).
+
+Head layout is grouped-GQA like kernels/flash_attention.py: q is
+(B, KV, G, hd) with the G query heads of kv head `kv` contracting against
+the COMPACT page pool (no head-expansion gather, 1x kv-page traffic).
+Online-softmax state (acc/m/l per (b, kv)) lives in VMEM scratch across the
+page steps, which form the innermost (sequential) grid dimension.
+
+Block shapes are (G, hd)/(page_size, hd) — production sizing should pick
+page_size and G*hd at MXU/VPU multiples; correctness is validated on CPU in
+interpret mode against kernels.ref.paged_attention_ref
+(`python -m repro.kernels.paged_attention --selftest`).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _live_pages(length, page_size: int):
+    return (length + page_size - 1) // page_size
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, sm_scale: float, page_size: int,
+                  window: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    G = q_ref.shape[2]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])  # length-0 rows stay 0
+
+    length = len_ref[b]
+    n_live = _live_pages(length, page_size)
+
+    @pl.when(p < n_live)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        k_pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (G, page_size), 1)
+        ok = k_pos < length  # tail of the last page
+        if window:  # sliding window from the query at position length-1
+            ok &= (length - 1 - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        probs = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(probs, v)
+        m_ref[...] = m_cur
+        l_ref[...] = l_prev * alpha + jnp.sum(probs, axis=1)
+
+    @pl.when((p == n_live - 1) & (length > 0))
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, lengths: jax.Array, *,
+                    window: int = 0, interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); k_pages/v_pages: (N, page_size, KV, hd);
+    block_table: (B, P) int32 physical page ids (-1 = absent);
+    lengths: (B,) int32 live tokens (query at position lengths-1);
+    window: sliding-window size (0 = full causal context).
+
+    Returns (B, KV, G, hd).  Rows with length 0 return zeros.
+    """
+    B, KV, G, hd = q.shape
+    N, page_size, KVp, hdp = k_pages.shape
+    assert (KV, hd) == (KVp, hdp) and v_pages.shape == k_pages.shape
+    P = block_table.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    def kv_map(b, h, p, table, lens):
+        n_live = _live_pages(lens[b], page_size)
+        pc = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        return (jnp.maximum(table[b, pc], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, table, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), kv_map),
+            pl.BlockSpec((1, page_size, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, p, table, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, sm_scale=sm_scale,
+                               page_size=page_size, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def _selftest() -> None:
+    """Interpret-mode parity vs the pure-jnp oracle (CPU CI gate)."""
+    import numpy as np
+
+    from . import ref
+
+    rng = np.random.default_rng(0)
+    for (B, KV, G, hd, ps, P, win) in [(3, 2, 4, 32, 8, 4, 0),
+                                       (2, 1, 8, 64, 16, 3, 0),
+                                       (4, 2, 2, 32, 8, 8, 16)]:
+        N = B * P + 1
+        q = jnp.asarray(rng.standard_normal((B, KV, G, hd)), jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
+        lengths = rng.integers(0, P * ps + 1, size=B)
+        perm = rng.permutation(np.arange(1, N))  # pages deliberately shuffled
+        table = np.full((B, P), -1, np.int32)
+        used = 0
+        for b in range(B):
+            n = -(-int(lengths[b]) // ps)
+            table[b, :n] = perm[used: used + n]
+            used += n
+        out = paged_attention(q, kp, vp, jnp.asarray(table),
+                              jnp.asarray(lengths, jnp.int32), window=win,
+                              interpret=True)
+        want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                                       jnp.asarray(lengths, jnp.int32),
+                                       window=win)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        print(f"paged_attention parity OK: B={B} KV={KV} G={G} hd={hd} "
+              f"ps={ps} P={P} window={win} lengths={lengths.tolist()}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true",
+                    help="interpret-mode ref-vs-kernel parity check")
+    args = ap.parse_args()
+    if args.selftest:
+        _selftest()

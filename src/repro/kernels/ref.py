@@ -32,6 +32,38 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, lengths: jax.Array, *,
+                        window: int = 0) -> jax.Array:
+    """Paged single-token decode attention, gather-then-softmax oracle.
+
+    q: (B, KV, G, hd) — one query token per sequence, grouped head layout
+    (q head (kv, g) attends kv head kv); k_pages/v_pages: (N, ps, KV, hd)
+    physical page pools; block_table: (B, P) int32 physical page ids (-1 =
+    absent, masked); lengths: (B,) int32 live tokens per sequence (the query
+    sits at position lengths-1); window: sliding-window size (0 = full).
+    Rows with length 0 return zeros.
+    """
+    B, KV, G, hd = q.shape
+    _, ps, _, _ = k_pages.shape
+    P = block_table.shape[1]
+    tbl = jnp.maximum(block_table, 0)
+    k = jnp.take(k_pages, tbl, axis=0).reshape(B, P * ps, KV, hd)
+    v = jnp.take(v_pages, tbl, axis=0).reshape(B, P * ps, KV, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(P * ps)[None]
+    ok = pos < lengths[:, None]  # (B, S)
+    if window:
+        ok &= (lengths[:, None] - 1 - pos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
 def scd_pass_ref(x, y, alpha, w, mask, lam_n, sigma):
     """Sequential SCD oracle matching kernels/scd.py (per worker)."""
     K, M, F = x.shape

@@ -67,7 +67,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           prompt_len: Tuple[int, int] = (8, 24),
           max_new_tokens: Tuple[int, int] = (4, 12),
           workers: int = 1, scale_events: Optional[str] = None,
-          straggler_policy: bool = False, seed: int = 0) -> Dict:
+          straggler_policy: bool = False, kv_layout: str = "flat",
+          page_size: int = 8, seed: int = 0) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary."""
     cfg = get_config(arch)
     cfg = smoke_variant(cfg) if smoke else scale_config(cfg, scale)
@@ -89,7 +90,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
 
     engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
                          prefill_bucket=prefill_bucket, n_workers=workers,
-                         policies=policies, seed=seed)
+                         policies=policies, kv_layout=kv_layout,
+                         page_size=page_size, seed=seed)
     metrics = engine.run(reqs)
     out = metrics.summarize()
     out["arch"] = arch
@@ -120,6 +122,10 @@ def main() -> None:
     ap.add_argument("--scale-events", default=None,
                     help="'tick:workers,...'; default = k -> k+1 -> k mid-run")
     ap.add_argument("--straggler-policy", action="store_true")
+    ap.add_argument("--kv-layout", default="flat", choices=["flat", "paged"],
+                    help="paged = block-table KV pool + chunked prefill")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged layout)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true", help="print raw JSON")
     args = ap.parse_args()
@@ -131,7 +137,9 @@ def main() -> None:
                 prefill_bucket=args.prefill_bucket, prompt_len=pl,
                 max_new_tokens=mn, workers=args.workers,
                 scale_events=args.scale_events,
-                straggler_policy=args.straggler_policy, seed=args.seed)
+                straggler_policy=args.straggler_policy,
+                kv_layout=args.kv_layout, page_size=args.page_size,
+                seed=args.seed)
     if args.json:
         print(json.dumps(out, indent=2))
         return

@@ -215,8 +215,9 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
                      *, window: int = 0) -> jax.Array:
     """One-token attention against a (possibly seq-sharded) cache.
 
-    q: (B, 1, H_pad, hd); k_cache/v_cache: (B, Sc, KV, hd);
-    q_pos: scalar or (B, 1) per-row positions (continuous-batching slots);
+    q: (B, Q, H_pad, hd); k_cache/v_cache: (B, Sc, KV, hd);
+    q_pos: scalar, (B, 1), or (B, Q) absolute query positions
+    (continuous-batching slots / chunked prefill);
     k_pos: (Sc,) or (B, Sc) absolute positions (-1 = empty slot).
     """
     B, Q, HP, hd = q.shape
@@ -226,8 +227,11 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     KV = cfg.kv_heads()
     if k_pos.ndim == 1:
         k_pos = k_pos[None, :]
-    d = q_pos - k_pos
-    ok = (d >= 0) & (k_pos >= 0)
+    q_posv = jnp.asarray(q_pos)
+    if q_posv.ndim == 0:
+        q_posv = q_posv[None, None]
+    d = q_posv[..., :, None] - k_pos[:, None, :]  # (B|1, Q|1, Sc)
+    ok = (d >= 0) & (k_pos[:, None, :] >= 0)
     if window:
         ok &= d < window
     qs = q * q.dtype.type(scale)
@@ -237,7 +241,7 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
         qg = qs.reshape(B, Q, KV, g_pad, hd)
         scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache,
                             preferred_element_type=jnp.float32)
-        bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+        bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
         probs = jax.nn.softmax(scores + bias, axis=-1)
         out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v_cache.dtype),
                          v_cache).reshape(B, Q, HP, hd)
@@ -246,10 +250,33 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
         vf = expand_kv(cfg, v_cache)
         scores = jnp.einsum("bqhe,bshe->bhqs", qs, kf,
                             preferred_element_type=jnp.float32)
-        bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+        bias = jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
         probs = jax.nn.softmax(scores + bias, axis=-1)
         out = jnp.einsum("bhqs,bshe->bqhe", probs.astype(vf.dtype), vf)
     return out * hmask[None, None, :, None].astype(out.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: gather-through-block-table helpers (XLA path; the Pallas
+# kernel in kernels/paged_attention.py skips the gather entirely)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """(N, ps, KV, hd) pool + (B, P) table -> (B, P*ps, KV, hd) in logical
+    token order.  Absent entries (-1) clamp to the null page; callers mask
+    them by position validity (paged_k_pos)."""
+    B, P = block_table.shape
+    _, ps, KV, hd = pages.shape
+    seq = jnp.take(pages, jnp.maximum(block_table, 0), axis=0)
+    return seq.reshape(B, P * ps, KV, hd)
+
+
+def paged_k_pos(lengths: jax.Array, seq_len: int) -> jax.Array:
+    """(B,) live lengths -> (B, seq_len) k_pos vector (-1 beyond live),
+    matching the flat per-slot cache's k_pos semantics bit-for-bit."""
+    pos = jnp.arange(seq_len, dtype=jnp.int32)[None]
+    return jnp.where(pos < lengths[:, None], pos, -1)
 
 
 def attn_out(p, ctx: jax.Array, rules: Optional[AxisRules] = None) -> jax.Array:

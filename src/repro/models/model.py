@@ -281,6 +281,94 @@ def decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (block tables over fixed-size token pages)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int,
+                     page_size: int) -> Dict[str, Any]:
+    """Physical K/V page pools: {"blocks": {"k","v": (nb, n_pages, ps, KV,
+    hd)}}.  Page 0 is the engine's reserved null page (masked writes land
+    there).  Per-slot fill depth lives in the block table + lengths the
+    caller threads through `paged_decode_step`; there is no device-side
+    k_pos state.  dense/moe only (flat recurrent state does not page)."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged cache supports dense/moe; got {cfg.family!r}")
+    nb = tfm.n_blocks(cfg)
+    kv, hd = cfg.kv_heads(), cfg.head_dim_()
+    dt = jnp.dtype(cfg.dtype)
+    shape = (nb, n_pages, page_size, kv, hd)
+    return {"blocks": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
+
+
+def paged_decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
+                      pos: jax.Array, table: jax.Array, lengths: jax.Array,
+                      *, rules: AxisRules, window: Optional[int] = None,
+                      impl: str = "xla") -> Tuple[jax.Array, Dict[str, Any]]:
+    """One paged decode step.  token: (B, 1) int32; pos: (B,) per-row write
+    positions; table: (B, P) block table; lengths: (B,) live tokens incl.
+    this one (0 = inactive row, output garbage, writes -> null page).
+
+    Returns (logits (B, 1, V), new cache)."""
+    win = cfg.sliding_window if window is None else window
+    x = _embed(cfg, params, token)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", None, None))
+    q_pos = pos.astype(jnp.int32)[:, None]
+
+    def body(x, xs):
+        bp, bc = xs
+        x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table, lengths,
+                                           bc, window=win, rules=rules,
+                                           impl=impl)
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    return _logits(cfg, params, x), dict(cache, blocks=new_blocks)
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                        offset: jax.Array, chunk_end: jax.Array,
+                        table: jax.Array, *, rules: AxisRules,
+                        window: Optional[int] = None
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One chunk of an incremental (chunked) prefill.
+
+    tokens: (B, C) the next C prompt tokens of each row, right-padded;
+    offset: (B,) absolute position of each row's first chunk token;
+    chunk_end: (B,) live length after this chunk (offset + real chunk
+    tokens; 0 marks an inactive row).  Chunk q attends the row's previously
+    paged context plus itself (causal by absolute position), and the
+    chunk's K/V pages are written in place — O(chunk) work per call, so a
+    long prompt amortizes over many engine ticks instead of stalling one.
+
+    Returns (last-token logits (B, 1, V), new cache)."""
+    win = cfg.sliding_window if window is None else window
+    B, C = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", None, None))
+    q_pos = (offset.astype(jnp.int32)[:, None]
+             + jnp.arange(C, dtype=jnp.int32)[None])
+
+    def body(x, xs):
+        bp, bc = xs
+        x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table,
+                                           chunk_end, bc, window=win,
+                                           rules=rules)
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    logits = _logits(cfg, params, x)
+    last = jnp.clip(chunk_end - offset - 1, 0, C - 1).astype(jnp.int32)
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+    return last_logits, dict(cache, blocks=new_blocks)
+
+
 def prefill(cfg: ModelConfig, params, tokens: jax.Array, *,
             memory: Optional[jax.Array] = None, rules: AxisRules,
             window: Optional[int] = None, remat: bool = True,

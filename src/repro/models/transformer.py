@@ -380,6 +380,72 @@ def block_apply(cfg: ModelConfig, bp, x, positions, *, block_type=None,
 
 
 # ---------------------------------------------------------------------------
+# Block apply: paged decode / chunked prefill (token positions -> pages)
+# ---------------------------------------------------------------------------
+
+
+def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
+                       *, window=0, rules: AxisRules = None, impl="xla"):
+    """Paged-KV block step over new tokens x: (B, Q, D) at positions
+    q_pos: (B, Q).  Q == 1 is decode; Q > 1 is one chunked-prefill chunk.
+
+    cache: {"k": (N, ps, KV, hd), "v": ...} physical page pools shared by
+    every sequence; table: (B, P) int32 block table (-1 absent);
+    lengths: (B,) live tokens INCLUDING the new ones (0 = inactive row:
+    its writes route to the null page and its output is garbage).
+
+    New-token K/V rows scatter into exactly the owning pages (O(new tokens)
+    writes — no pool-wide copy); attention gathers K/V through the table so
+    only the P pages the table names are ever read.  dense/moe only.
+    """
+    bt = cfg.family
+    if bt not in ("dense", "moe"):
+        raise NotImplementedError(f"paged decode supports dense/moe; got {bt!r}")
+    B, Q, _ = x.shape
+    ps = cache["k"].shape[1]
+    P = table.shape[1]
+
+    h_in = rms_norm(x, bp["ln1"])
+    q, k, v = attn.qkv_project(cfg, bp["attn"], h_in, q_pos, rules=rules)
+
+    # scatter the Q new K/V rows into their pages; tokens past a row's live
+    # length (padding / inactive rows) route to the reserved null page 0
+    valid = q_pos < lengths[:, None]
+    pidx = jnp.take_along_axis(table, jnp.minimum(q_pos // ps, P - 1), axis=1)
+    pg = jnp.where(valid, jnp.maximum(pidx, 0), 0).reshape(-1)
+    off = (q_pos % ps).reshape(-1)
+    ck = cache["k"].at[pg, off].set(k.reshape((B * Q,) + k.shape[2:]))
+    cv = cache["v"].at[pg, off].set(v.reshape((B * Q,) + v.shape[2:]))
+
+    if impl == "pallas" and Q == 1:
+        kind, HP, g_pad = attn.head_layout(cfg)
+        if kind != "grouped":
+            raise NotImplementedError(
+                "pallas paged decode needs the grouped head layout")
+        from ..kernels.paged_attention import paged_attention
+        qg = q.reshape(B, cfg.kv_heads(), g_pad, cfg.head_dim_())
+        ctx = paged_attention(qg, ck, cv, table, lengths, window=window,
+                              interpret=jax.default_backend() != "tpu")
+        _, hmask = attn.head_maps(cfg)
+        ctx = ctx.reshape(B, 1, HP, cfg.head_dim_())
+        ctx = ctx * hmask[None, None, :, None].astype(ctx.dtype)
+    else:
+        kseq = attn.gather_pages(ck, table)
+        vseq = attn.gather_pages(cv, table)
+        k_pos = attn.paged_k_pos(lengths, P * ps)
+        ctx = attn.decode_attention(cfg, q, kseq, vseq, q_pos, k_pos,
+                                    window=window)
+    x = x + attn.attn_out(bp["attn"], ctx, rules)
+    h2 = rms_norm(x, bp["ln2"])
+    if bt == "moe":
+        f, _ = moe_mod.moe_ffn(cfg, bp["moe"], h2, rules)
+    else:
+        f = swiglu(h2, bp["mlp"]["gate"], bp["mlp"]["up"], bp["mlp"]["down"],
+                   rules)
+    return x + f, dict(cache, k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
 # Block apply: decode (single token)
 # ---------------------------------------------------------------------------
 

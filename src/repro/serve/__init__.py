@@ -11,21 +11,27 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 `core.chunks.Assignment` and `core.policies` (the
                 slot-chunk -> worker map obeys the same scheduler-phase
                 ownership contract as training chunks)
+- `pages`     — paged KV bookkeeping: fixed-size token pages, per-slot
+                block tables, alloc/free/defrag with SlotPool-style
+                invariant checks (page 0 reserved as the null write sink)
 - `engine`    — `ServeEngine`: carries KV state across `resize(k)` events
                 (per-k jit cache + device_put resharding, mirroring
-                `launch.elastic.ElasticTrainer`), supports suspend/resume
-                (cluster scale-to-zero) and an injected simulation clock,
-                and records TTFT / per-token latency / throughput /
-                occupancy / queueing delay
+                `launch.elastic.ElasticTrainer`), supports flat and PAGED
+                KV layouts (O(pages) admission scatter, block-table decode
+                gather, chunked prefill interleaved with decode),
+                suspend/resume (cluster scale-to-zero), an injected
+                simulation clock, and records TTFT / per-token latency /
+                throughput / occupancy / page occupancy / admission bytes
 """
 from .engine import ServeEngine, ServeMetrics
+from .pages import PageAllocator, PageError
 from .request import (Request, RequestState, poisson_arrivals,
                       synthetic_requests, trace_arrivals)
 from .scheduler import SlotScheduler
 from .slots import SlotPool
 
 __all__ = [
-    "Request", "RequestState", "ServeEngine", "ServeMetrics", "SlotPool",
-    "SlotScheduler", "poisson_arrivals", "synthetic_requests",
-    "trace_arrivals",
+    "PageAllocator", "PageError", "Request", "RequestState", "ServeEngine",
+    "ServeMetrics", "SlotPool", "SlotScheduler", "poisson_arrivals",
+    "synthetic_requests", "trace_arrivals",
 ]

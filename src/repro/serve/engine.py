@@ -3,23 +3,38 @@ across `resize(k)` events.
 
 One engine tick =
   scheduler phase : policies (scale/rebalance/straggler) -> admission ->
-                    per-request bucketed prefill + KV insert into free slots
+                    prefill (whole-prompt bucketed, or page-sized CHUNKS
+                    for long prompts) + KV insert
   solver phase    : ONE jitted decode step over the whole pool (every active
                     slot advances at its own position; finished/empty slots
                     are masked on the host), bracketed by the assignment's
                     begin/end_iteration ownership contract.
 
+Two KV layouts share the scheduler and metrics:
+
+- ``flat`` (the reference oracle): one (capacity, cache_len) row per slot.
+  Admission scatters prefilled rows with a full pool copy and decode
+  attends over all cache_len positions.
+- ``paged``: fixed-size token pages + per-slot block tables
+  (`serve.pages.PageAllocator`).  Admission writes ONLY the admitted
+  request's pages (donated in-place scatter, O(pages) transfer), decode
+  gathers K/V through the block table and attends only over pages live in
+  this batch (table width bucketed, so work tracks live tokens instead of
+  pool capacity), and long prompts prefill in chunks interleaved with
+  decode ticks so one long admission cannot stall in-flight streams.
+
 Elasticity mirrors `launch.elastic.ElasticTrainer`: `resize(k)` rebuilds the
 mesh over the first min(k, n_devices) devices, re-shards params + the KV
 pool with `jax.device_put` (the chunk-transfer analogue for serving state),
 and swaps to a per-k cached jitted step — in-flight requests keep their KV
-rows and next-token stream bit-for-bit.
+rows and next-token stream bit-for-bit.  Compiled artifacts are LRU-bounded
+and evicted on resize so bursty scale churn cannot accumulate executables.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +45,7 @@ from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
 from ..models import model as M
 from ..sharding import AxisRules
+from .pages import PageAllocator
 from .request import Request, RequestState
 from .scheduler import SlotScheduler
 
@@ -48,6 +64,9 @@ class TickRecord:
     decode_s: float
     admitted: int
     tokens_emitted: int
+    admission_bytes: int = 0  # modeled device bytes written by admission
+    prefill_chunks: int = 0  # chunked-prefill chunks advanced this tick
+    page_occupancy: float = 0.0  # live fraction of the KV page pool
 
 
 @dataclasses.dataclass
@@ -58,6 +77,7 @@ class ServeMetrics:
         default_factory=list)  # (tick, k_before, k_after)
     suspend_events: List[Tuple[int, str]] = dataclasses.field(
         default_factory=list)  # (tick, "suspend" | "resume")
+    jit_cache_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
 
     def summarize(self) -> Dict[str, Any]:
@@ -69,6 +89,7 @@ class ServeMetrics:
         toks = sum(r.n_generated for r in done)
         pct = (lambda a, q: float(np.percentile(a, q)) if len(a) else None)
         occ = np.array([t.occupancy for t in self.ticks])
+        pocc = np.array([t.page_occupancy for t in self.ticks])
         return {
             "requests_finished": len(done),
             "requests_total": len(self.requests),
@@ -79,11 +100,28 @@ class ServeMetrics:
             "queue_delay_p50_s": pct(qdel, 50),
             "queue_delay_p99_s": pct(qdel, 99),
             "occupancy_mean": float(occ.mean()) if len(occ) else 0.0,
+            "page_occupancy_mean": float(pocc.mean()) if len(pocc) else 0.0,
+            "admission_bytes_total": int(sum(t.admission_bytes
+                                             for t in self.ticks)),
+            "prefill_chunks_total": int(sum(t.prefill_chunks
+                                            for t in self.ticks)),
+            "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
             "scale_events": [list(e) for e in self.scale_events],
             "suspend_events": [list(e) for e in self.suspend_events],
             "wall_s": self.wall_s,
         }
+
+
+def _lru_get(cache: Dict, key, build: Callable[[], Any], cap: int):
+    """Move-to-end LRU over an insertion-ordered dict."""
+    if key in cache:
+        cache[key] = cache.pop(key)
+    else:
+        cache[key] = build()
+    while len(cache) > cap:
+        cache.pop(next(iter(cache)))
+    return cache[key]
 
 
 class ServeEngine:
@@ -95,15 +133,41 @@ class ServeEngine:
                  slots_per_chunk: int = 2, max_admit_per_tick: int = 4,
                  seed: int = 0, params: Optional[Any] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
-                 clock: Optional[Any] = None):
+                 clock: Optional[Any] = None,
+                 kv_layout: str = "flat", page_size: int = 8,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None,
+                 paged_impl: str = "xla",
+                 max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServeEngine supports flat-KV families {SUPPORTED_FAMILIES}; "
                 f"got {cfg.family!r} (recurrent-state prefill is follow-on)")
+        if kv_layout not in ("flat", "paged"):
+            raise ValueError(f"kv_layout must be 'flat' or 'paged', "
+                             f"got {kv_layout!r}")
         self.cfg = cfg
         self.capacity = capacity
         self.cache_len = cache_len
         self.prefill_bucket = prefill_bucket
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self.paged_impl = paged_impl
+        self.chunked_prefill = (kv_layout == "paged" if chunked_prefill is None
+                                else chunked_prefill)
+        self.prefill_chunk = prefill_chunk or prefill_bucket
+        self.max_cached_meshes = max(1, max_cached_meshes)
+        self.max_cached_fns = max(1, max_cached_fns)
+        if self.chunked_prefill and kv_layout != "paged":
+            raise ValueError("chunked_prefill requires kv_layout='paged' "
+                             "(chunks append to pages in place)")
+        if kv_layout == "paged":
+            if cache_len % page_size or prefill_bucket % page_size:
+                raise ValueError("cache_len and prefill_bucket must be "
+                                 "multiples of page_size")
+            if self.prefill_chunk % page_size:
+                raise ValueError("prefill_chunk must be a multiple of "
+                                 "page_size")
         self.devices = list(jax.devices())
         self.rng = np.random.default_rng(seed)
         self.params = (params if params is not None
@@ -116,20 +180,36 @@ class ServeEngine:
         self._clock = clock
         self.suspended = False
 
-        cache = M.init_cache(cfg, capacity, cache_len, per_slot=True)
-        self.blocks = cache["blocks"]
-        self.k_pos = cache["k_pos"]
+        self.max_pages_per_slot = cache_len // page_size
+        if kv_layout == "paged":
+            n_pages = capacity * self.max_pages_per_slot + 1  # +1: null page
+            self.pages: Optional[PageAllocator] = PageAllocator(
+                n_pages, page_size)
+            self.blocks = M.init_paged_cache(cfg, n_pages,
+                                             page_size)["blocks"]
+            self.k_pos = None
+        else:
+            self.pages = None
+            cache = M.init_cache(cfg, capacity, cache_len, per_slot=True)
+            self.blocks = cache["blocks"]
+            self.k_pos = cache["k_pos"]
+        self._pool_bytes = int(sum(np.prod(v.shape) * v.dtype.itemsize
+                                   for v in jax.tree.leaves(self.blocks)))
         # host-side per-slot stream state
         self.next_tok = np.zeros((capacity, 1), np.int32)
         self._by_slot: Dict[int, Request] = {}
+        self._prefilling: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, off)
         self.metrics = ServeMetrics()
         self._tick = 0
         self._t0: Optional[float] = None
         self._last_stats: Dict = {}
 
-        # per-k compiled artifacts: k_mesh -> (mesh, rules, decode_fn)
+        # per-k compiled artifacts: k_mesh -> (mesh, rules, decode_fn);
+        # dependent jit caches are keyed by k_mesh too and evicted with it
         self._k_cache: Dict[int, Tuple[Mesh, AxisRules, Any]] = {}
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
+        self._insert_cache: Dict[Tuple[int, int, int], Any] = {}
+        self._chunk_cache: Dict[Tuple[int, int, int], Any] = {}
         self.k = 0
         self.mesh: Optional[Mesh] = None
         self.resize(n_workers)
@@ -143,6 +223,18 @@ class ServeEngine:
         rules = AxisRules(mesh)
         cfg = self.cfg
 
+        if self.kv_layout == "paged":
+            impl = self.paged_impl
+
+            def decode(params, blocks, tok, pos, table, lengths):
+                logits, new_cache = M.paged_decode_step(
+                    cfg, params, {"blocks": blocks}, tok, pos, table,
+                    lengths, rules=rules, impl=impl)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return nxt, new_cache["blocks"]
+
+            return mesh, rules, jax.jit(decode, donate_argnums=(1,))
+
         def decode(params, blocks, k_pos, tok, pos):
             cache = {"blocks": blocks, "k_pos": k_pos}
             logits, new_cache = M.decode_step(cfg, params, cache, tok, pos,
@@ -153,56 +245,147 @@ class ServeEngine:
         return mesh, rules, jax.jit(decode, donate_argnums=(1, 2))
 
     def _cache_sharding(self, mesh: Mesh):
-        """Shard the pool over the data axis when capacity divides, else
-        replicate (GSPMD would pad unevenly on the batch dim)."""
+        """Flat pool: shard the slot (batch) dim over data when capacity
+        divides, else replicate (GSPMD would pad unevenly)."""
         ndev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
         batch = "data" if self.capacity % ndev == 0 else None
         return (NamedSharding(mesh, P(None, batch)),
                 NamedSharding(mesh, P(batch)))
 
+    def _paged_sharding(self, mesh: Mesh):
+        """Paged pool (nb, n_pages, ps, kv, hd): shard the page dim when it
+        divides the mesh, else replicate."""
+        ndev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        n_pages = jax.tree.leaves(self.blocks)[0].shape[1]
+        page = "data" if n_pages % ndev == 0 else None
+        return NamedSharding(mesh, P(None, page))
+
+    def _evict_stale(self) -> None:
+        """Drop compiled prefill/insert/chunk fns whose mesh was evicted."""
+        live = set(self._k_cache)
+        for cache in (self._prefill_cache, self._insert_cache,
+                      self._chunk_cache):
+            for key in [k for k in cache if k[0] not in live]:
+                del cache[key]
+
+    def _stamp_cache_sizes(self) -> None:
+        self.metrics.jit_cache_sizes = {
+            "k_cache": len(self._k_cache),
+            "prefill_cache": len(self._prefill_cache),
+            "insert_cache": len(self._insert_cache),
+            "chunk_cache": len(self._chunk_cache),
+        }
+
     def resize(self, k: int) -> None:
         """Elastic scale event: k logical workers, mesh over the first
         min(k, n_devices) devices.  KV state and in-flight requests carry
-        over; only the sharding and the compiled step change."""
+        over; only the sharding and the compiled step change.  Stale
+        compiled artifacts beyond `max_cached_meshes` are evicted here."""
         k = max(1, k)
         if self.scheduler.n_workers != k:
             self.scheduler.set_workers(k)
         km = self._k_mesh(k)
-        if km not in self._k_cache:
-            self._k_cache[km] = self._build(km)
-        mesh, rules, _ = self._k_cache[km]
+        mesh, rules, _ = _lru_get(self._k_cache, km,
+                                  lambda: self._build(km),
+                                  self.max_cached_meshes)
+        self._evict_stale()
         if mesh is not self.mesh:
-            blocks_s, row_s = self._cache_sharding(mesh)
             self.params = jax.device_put(self.params,
                                          NamedSharding(mesh, P()))
-            self.blocks = jax.device_put(self.blocks, blocks_s)
-            self.k_pos = jax.device_put(self.k_pos, row_s)
+            if self.kv_layout == "paged":
+                self.blocks = jax.device_put(self.blocks,
+                                             self._paged_sharding(mesh))
+            else:
+                blocks_s, row_s = self._cache_sharding(mesh)
+                self.blocks = jax.device_put(self.blocks, blocks_s)
+                self.k_pos = jax.device_put(self.k_pos, row_s)
         self.k, self.mesh, self.rules = k, mesh, rules
+        self._stamp_cache_sizes()
 
     # --- prefill ----------------------------------------------------------
     def _bucket(self, n: int) -> int:
         b = self.prefill_bucket
         return min(((n + b - 1) // b) * b, self.cache_len)
 
-    def _prefill_fn(self, bucket: int):
-        key = (self._k_mesh(self.k), bucket)
-        if key not in self._prefill_cache:
-            cfg, rules, cache_len = self.cfg, self.rules, self.cache_len
+    def _page_bucket(self, n_pages: int) -> int:
+        """Block-table width bucket: next power of two, so the per-width
+        decode/chunk retrace count stays logarithmic in cache_len."""
+        p = 1
+        while p < max(n_pages, 1):
+            p *= 2
+        return min(p, self.max_pages_per_slot)
 
+    def _prefill_fn(self, bucket: int):
+        km = self._k_mesh(self.k)
+        cfg, rules, cache_len = self.cfg, self.rules, self.cache_len
+        paged = self.kv_layout == "paged"
+
+        def build():
             def prefill(params, tokens, true_len):
-                logits, cache = M.prefill(cfg, params, tokens, rules=rules,
-                                          remat=False, cache_len=cache_len,
-                                          true_len=true_len)
+                # paged rows stay at bucket length (chopped into pages by
+                # the insert scatter); flat rows pad out to cache_len
+                logits, cache = M.prefill(
+                    cfg, params, tokens, rules=rules, remat=False,
+                    cache_len=bucket if paged else cache_len,
+                    true_len=true_len)
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                if paged:
+                    return nxt, cache["blocks"]["k"], cache["blocks"]["v"]
                 return nxt, cache["blocks"], cache["k_pos"]
 
-            self._prefill_cache[key] = jax.jit(prefill)
-        return self._prefill_cache[key]
+            return jax.jit(prefill)
+
+        return _lru_get(self._prefill_cache, (km, bucket), build,
+                        self.max_cached_fns)
+
+    def _insert_fn(self, n: int, bucket: int):
+        """Paged admission scatter: writes ONLY the admitted requests' pages
+        into the (donated) pools — O(pages) transfer, no pool copy."""
+        km = self._k_mesh(self.k)
+        ps = self.page_size
+        bpp = bucket // ps
+
+        def build():
+            def insert(blocks, rows_k, rows_v, page_ids):
+                def chop(rows):  # (nb, n, bucket, ...) -> (nb, n*bpp, ps, ...)
+                    return rows.reshape(rows.shape[0], n * bpp, ps,
+                                        *rows.shape[3:])
+                return {"k": blocks["k"].at[:, page_ids].set(chop(rows_k)),
+                        "v": blocks["v"].at[:, page_ids].set(chop(rows_v))}
+
+            return jax.jit(insert, donate_argnums=(0,))
+
+        return _lru_get(self._insert_cache, (km, n, bucket), build,
+                        self.max_cached_fns)
+
+    def _chunk_fn(self, chunk: int, table_width: int):
+        km = self._k_mesh(self.k)
+        cfg, rules = self.cfg, self.rules
+
+        def build():
+            def step(params, blocks, tokens, offset, chunk_end, table):
+                last, new_cache = M.paged_prefill_chunk(
+                    cfg, params, {"blocks": blocks}, tokens, offset,
+                    chunk_end, table, rules=rules)
+                nxt = jnp.argmax(last[:, -1], -1).astype(jnp.int32)
+                return nxt, new_cache["blocks"]
+
+            return jax.jit(step, donate_argnums=(1,))
+
+        return _lru_get(self._chunk_cache, (km, chunk, table_width), build,
+                        self.max_cached_fns)
+
+    @property
+    def _page_bytes(self) -> int:
+        """Device bytes of one K+V page across the block stack."""
+        leaf = jax.tree.leaves(self.blocks)[0]  # (nb, N, ps, kv, hd)
+        nb, _, ps, kv, hd = leaf.shape
+        return 2 * nb * ps * kv * hd * leaf.dtype.itemsize
 
     def _insert(self, slots, blocks_rows, k_pos_rows) -> None:
-        """Scatter prefilled rows into the pool at `slots` (one batched
-        scatter per admit group — a full pool copy; paged KV is the named
-        follow-on)."""
+        """Flat-layout scatter of prefilled rows into the pool at `slots`
+        (one batched scatter per admit group — a full pool copy; the paged
+        layout replaces this with `_insert_fn`)."""
         idx = jnp.asarray(slots, jnp.int32)
         # rows (nb, n, cache_len, ...) scatter into pool (nb, cap, cache_len, ...)
         self.blocks = jax.tree.map(
@@ -210,11 +393,42 @@ class ServeEngine:
             self.blocks, blocks_rows)
         self.k_pos = self.k_pos.at[idx].set(k_pos_rows)
 
-    def _do_prefill(self, admitted: Sequence[Request]) -> None:
+    def _release(self, req: Request, now: float) -> None:
+        """Finish a request: return its pages (paged) and its slot."""
+        if self.pages is not None and req.slot is not None:
+            self.pages.free_slot(req.slot)
+        self.scheduler.release(req, now)
+
+    def _start_decoding(self, req: Request, nxt: int, now: float) -> None:
+        """Common PREFILL -> DECODING (or immediate finish) transition once
+        the first token exists."""
+        req.generated.append(nxt)
+        req.t_first_token = now
+        if req.done():  # max_new_tokens == 1: prefill's token ends it
+            self._release(req, now)
+            return
+        req.state = RequestState.DECODING
+        self.next_tok[req.slot, 0] = nxt
+        self.scheduler.pool.pos[req.slot] = req.prompt_len
+        self._by_slot[req.slot] = req
+
+    def _do_prefill(self, admitted: Sequence[Request]) -> int:
         """Prefill this tick's admissions, one batched forward per shared
-        bucket length, and insert their KV rows into the pool."""
-        groups: Dict[int, List[Request]] = {}
+        bucket length, and insert their KV into the pool.  Long prompts in
+        paged+chunked mode defer to `_advance_prefills` instead.  Returns
+        modeled admission bytes written to the device KV pool."""
+        direct: List[Request] = []
         for r in admitted:
+            # submit() already rejected prompt+max_new > cache_len, so the
+            # chunked table below can never outgrow max_pages_per_slot
+            if (self.chunked_prefill and r.prompt_len > self.prefill_chunk):
+                self.pages.alloc_slot(r.slot, 0)
+                self._prefilling[r.slot] = (r, 0)
+            else:
+                direct.append(r)
+        nbytes = 0
+        groups: Dict[int, List[Request]] = {}
+        for r in direct:
             groups.setdefault(self._bucket(r.prompt_len), []).append(r)
         for bucket, group in sorted(groups.items()):
             n = len(group)
@@ -223,21 +437,64 @@ class ServeEngine:
             for i, r in enumerate(group):
                 toks[i, : r.prompt_len] = r.prompt
                 lens[i] = r.prompt_len
-            nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks), jnp.asarray(lens))
-            self._insert([r.slot for r in group], blocks_rows, k_pos_rows)
+            if self.kv_layout == "paged":
+                nxt, rows_k, rows_v = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens))
+                bpp = bucket // self.page_size
+                page_ids = np.zeros(n * bpp, np.int32)  # 0 -> null page
+                real = 0
+                for i, r in enumerate(group):
+                    tbl = self.pages.alloc_slot(r.slot, r.prompt_len)
+                    page_ids[i * bpp: i * bpp + len(tbl)] = tbl
+                    real += len(tbl)
+                self.blocks = self._insert_fn(n, bucket)(
+                    self.blocks, rows_k, rows_v, jnp.asarray(page_ids))
+                nbytes += real * self._page_bytes
+            else:
+                nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens))
+                self._insert([r.slot for r in group], blocks_rows, k_pos_rows)
+                nbytes += self._pool_bytes  # at[].set rebuilds the pool
             nxt = np.asarray(jax.block_until_ready(nxt))
             now = self._now()
             for i, r in enumerate(group):
-                r.generated.append(int(nxt[i]))
-                r.t_first_token = now
-                if r.done():  # max_new_tokens == 1: prefill's token ends it
-                    self.scheduler.release(r, now)
-                    continue
-                r.state = RequestState.DECODING
-                self.next_tok[r.slot, 0] = int(nxt[i])
-                self.scheduler.pool.pos[r.slot] = r.prompt_len
-                self._by_slot[r.slot] = r
+                self._start_decoding(r, int(nxt[i]), now)
+        return nbytes
+
+    def _advance_prefills(self) -> Tuple[int, int]:
+        """Advance every mid-prefill request by ONE page-aligned chunk (so
+        prefill work interleaves with decode instead of monopolizing the
+        tick).  Returns (chunks processed, modeled KV bytes written)."""
+        n_chunks = 0
+        nbytes = 0
+        tok_bytes = self._page_bytes // self.page_size
+        finished: List[int] = []
+        for slot in sorted(self._prefilling):
+            req, off = self._prefilling[slot]
+            C = self.prefill_chunk
+            take = min(C, req.prompt_len - off)
+            end = off + take
+            self.pages.ensure(slot, end)
+            nbytes += take * tok_bytes
+            width = self._page_bucket(self.pages.n_pages_of(slot))
+            table = self.pages.table_array(self.capacity, width,
+                                           only=[slot])[slot: slot + 1]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :take] = req.prompt[off:end]
+            nxt, self.blocks = self._chunk_fn(C, width)(
+                self.params, self.blocks, jnp.asarray(toks),
+                jnp.asarray([off], jnp.int32), jnp.asarray([end], jnp.int32),
+                jnp.asarray(table))
+            n_chunks += 1
+            if end >= req.prompt_len:
+                finished.append(slot)
+                tok = int(np.asarray(jax.block_until_ready(nxt))[0])
+                self._start_decoding(req, tok, self._now())
+            else:
+                self._prefilling[slot] = (req, end)
+        for slot in finished:
+            del self._prefilling[slot]
+        return n_chunks, nbytes
 
     # --- suspend / resume (cluster scale-to-zero) -------------------------
     def suspend(self) -> None:
@@ -252,6 +509,21 @@ class ServeEngine:
         if self.suspended:
             self.suspended = False
             self.metrics.suspend_events.append((self._tick, "resume"))
+
+    # --- defrag -----------------------------------------------------------
+    def defrag(self) -> bool:
+        """Compact live pages to the low physical ids (one gather over the
+        pool); block tables are rewritten, token streams are unchanged.
+        Returns True if a move happened."""
+        if self.pages is None:
+            return False
+        src = self.pages.defrag()
+        if src is None:
+            return False
+        idx = jnp.asarray(src)
+        self.blocks = {k: jnp.take(v, idx, axis=1)
+                       for k, v in self.blocks.items()}
+        return True
 
     # --- main loop --------------------------------------------------------
     def _now(self) -> float:
@@ -272,6 +544,17 @@ class ServeEngine:
             self.scheduler.submit(r)
             self.metrics.requests.append(r)
 
+    def _finish_at_capacity(self) -> None:
+        """A slot whose next write position is past the cache can't store
+        another KV row: finish its request instead of silently overwriting
+        the last row (pre-PR3 behavior clamped the position)."""
+        sched = self.scheduler
+        full = [s for s in self._by_slot if sched.pool.pos[s] >= self.cache_len]
+        if full:
+            now = self._now()
+            for slot in full:
+                self._release(self._by_slot.pop(slot), now)
+
     def tick(self) -> TickRecord:
         if self.suspended:
             raise RuntimeError("ServeEngine is suspended; call resume() "
@@ -288,8 +571,12 @@ class ServeEngine:
                 (self._tick, k_before, sched.n_workers))
             self.resize(sched.n_workers)
         admitted = sched.admit(now)
-        if admitted:
-            self._do_prefill(admitted)
+        admission_bytes = self._do_prefill(admitted) if admitted else 0
+        n_chunks = 0
+        if self._prefilling:
+            n_chunks, chunk_bytes = self._advance_prefills()
+            admission_bytes += chunk_bytes
+        self._finish_at_capacity()
 
         # ---- solver phase: one pool-wide decode step ----
         emitted = 0
@@ -298,12 +585,27 @@ class ServeEngine:
         if active:
             sched.begin_iteration()
             _, _, decode_fn = self._k_cache[self._k_mesh(self.k)]
-            pos = jnp.asarray(
-                np.minimum(sched.pool.pos, self.cache_len - 1), jnp.int32)
+            pos_np = sched.pool.pos
             t0 = time.perf_counter()
-            nxt, self.blocks, self.k_pos = decode_fn(
-                self.params, self.blocks, self.k_pos,
-                jnp.asarray(self.next_tok), pos)
+            if self.kv_layout == "paged":
+                for slot in active:  # new page at a page boundary
+                    self.pages.ensure(slot, int(pos_np[slot]) + 1)
+                width = self._page_bucket(
+                    max(self.pages.n_pages_of(s) for s in active))
+                table = self.pages.table_array(self.capacity, width,
+                                               only=active)
+                lengths = np.zeros(self.capacity, np.int32)
+                for slot in active:
+                    lengths[slot] = pos_np[slot] + 1
+                nxt, self.blocks = decode_fn(
+                    self.params, self.blocks, jnp.asarray(self.next_tok),
+                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
+                    jnp.asarray(lengths))
+            else:
+                nxt, self.blocks, self.k_pos = decode_fn(
+                    self.params, self.blocks, self.k_pos,
+                    jnp.asarray(self.next_tok),
+                    jnp.asarray(pos_np, jnp.int32))
             nxt = np.asarray(jax.block_until_ready(nxt))
             t_step = time.perf_counter() - t0
             sched.end_iteration()
@@ -317,7 +619,7 @@ class ServeEngine:
                 emitted += 1
                 if req.done():
                     del self._by_slot[slot]
-                    sched.release(req, now)
+                    self._release(req, now)
         else:
             sched.sim_time += 1.0  # idle ticks still advance schedule time
 
@@ -332,12 +634,17 @@ class ServeEngine:
                                  for w in range(sched.n_workers)},
         }
 
+        self._stamp_cache_sizes()
         rec = TickRecord(tick=self._tick, now=self._now(),
                          n_active=len(self._by_slot),
                          n_workers=sched.n_workers,
                          occupancy=sched.pool.occupancy(),
                          decode_s=t_step, admitted=len(admitted),
-                         tokens_emitted=emitted)
+                         tokens_emitted=emitted,
+                         admission_bytes=admission_bytes,
+                         prefill_chunks=n_chunks,
+                         page_occupancy=(self.pages.occupancy()
+                                         if self.pages else 0.0))
         self.metrics.ticks.append(rec)
         self._tick += 1
         return rec
@@ -352,8 +659,9 @@ class ServeEngine:
         self.submit(requests)
         self._now()  # start the clock
         sched = self.scheduler
-        while (sched.has_pending or self._by_slot) and self._tick < max_ticks:
-            if not self._by_slot and sched.has_pending:
+        while ((sched.has_pending or self._by_slot or self._prefilling)
+               and self._tick < max_ticks):
+            if not self._by_slot and not self._prefilling and sched.has_pending:
                 wait = sched.next_arrival() - self._now()
                 if wait > 0:  # idle until the next open-loop arrival
                     time.sleep(min(wait, 0.05))

@@ -1,0 +1,180 @@
+"""Paged KV bookkeeping: fixed-size token pages + per-slot block tables.
+
+The serving analogue of vLLM's block manager, kept — like `SlotPool` — as
+pure host-side state so the invariants are unit-testable without jax.  The
+device side (the actual K/V page pools, leading dim == n_pages) lives in the
+engine; this module only decides WHICH physical page backs WHICH logical
+(slot, token-range) and hands the engine int32 block tables to gather
+through.
+
+Physical page 0 is reserved as the NULL page: it is never allocated, block
+tables use it as the routing target for masked writes (inactive batch rows,
+right-padded prompt tails), and every read through it is masked out by
+position validity.  This makes the batched scatter/gather in the paged
+decode step total — no branchy host-side row filtering on the hot path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PageError(RuntimeError):
+    pass
+
+
+class PageAllocator:
+    """Allocator for a pool of `n_pages` physical pages of `page_size` tokens.
+
+    Each slot owns an ordered block table: entry j backs token positions
+    [j*page_size, (j+1)*page_size).  Pages are exclusively owned; alloc is
+    O(1) pop, free is O(pages-of-slot).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        # pop() hands out low page ids first (1, 2, ...)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}  # slot -> ordered page ids
+        self._owner: Dict[int, int] = {}  # page -> slot
+
+    # --- capacity math ----------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return max(0, -(-int(n_tokens) // self.page_size))
+
+    # --- alloc/free -------------------------------------------------------
+    def alloc_slot(self, slot: int, n_tokens: int = 0) -> List[int]:
+        """Open a block table for `slot` with capacity >= n_tokens."""
+        if slot in self._tables:
+            raise PageError(f"slot {slot} already has a block table")
+        self._tables[slot] = []
+        return self.ensure(slot, n_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+        """Grow slot's table to cover n_tokens; returns newly added pages."""
+        if slot not in self._tables:
+            raise PageError(f"slot {slot} has no block table")
+        table = self._tables[slot]
+        need = self.pages_for(n_tokens) - len(table)
+        added: List[int] = []
+        for _ in range(need):
+            if not self._free:
+                raise PageError(
+                    f"page pool exhausted ({self.n_pages - 1} usable pages)")
+            pg = self._free.pop()
+            table.append(pg)
+            self._owner[pg] = slot
+            added.append(pg)
+        return added
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Release the slot's pages back to the pool; returns them."""
+        if slot not in self._tables:
+            raise PageError(f"free of slot {slot} with no block table")
+        pages = self._tables.pop(slot)
+        for pg in pages:
+            del self._owner[pg]
+        self._free.extend(reversed(pages))  # lowest ids handed out again first
+        return pages
+
+    # --- queries ----------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return (self.n_pages - 1) - self.n_free
+
+    def occupancy(self) -> float:
+        return self.n_used / (self.n_pages - 1)
+
+    def table(self, slot: int) -> List[int]:
+        return list(self._tables.get(slot, ()))
+
+    def n_pages_of(self, slot: int) -> int:
+        return len(self._tables.get(slot, ()))
+
+    def max_table_len(self) -> int:
+        return max((len(t) for t in self._tables.values()), default=0)
+
+    def table_array(self, n_slots: int, width: int,
+                    only: Optional[Sequence[int]] = None) -> np.ndarray:
+        """(n_slots, width) int32 block table; -1 marks absent pages.
+
+        Row i is slot i's table (batch row == slot id in the engine's
+        pool).  `only` restricts emitted rows to those slots (others stay
+        all -1), letting the decode step bucket its table width to the
+        ACTIVE slots even while a longer mid-prefill table exists.
+        """
+        out = np.full((n_slots, width), -1, np.int32)
+        for slot in (self._tables if only is None else only):
+            table = self._tables.get(slot)
+            if table is None:
+                raise PageError(f"slot {slot} has no block table")
+            if slot >= n_slots:
+                raise PageError(f"slot {slot} out of range for {n_slots} rows")
+            if len(table) > width:
+                raise PageError(
+                    f"slot {slot} holds {len(table)} pages > table width {width}")
+            out[slot, : len(table)] = table
+        return out
+
+    # --- defrag -----------------------------------------------------------
+    def defrag(self) -> Optional[np.ndarray]:
+        """Compact live pages into the lowest physical ids (slot order).
+
+        Returns `src` (n_pages,) int32 with new_pool[i] = old_pool[src[i]],
+        or None when the layout is already compact.  The caller owns moving
+        the device-side page payloads with this gather; tables here are
+        rewritten in place.
+        """
+        order = [NULL_PAGE]
+        for slot in sorted(self._tables):
+            order.extend(self._tables[slot])
+        if order == list(range(len(order))):
+            return None
+        live = set(order)
+        order.extend(p for p in range(self.n_pages) if p not in live)
+        src = np.asarray(order, np.int32)
+        new_id = {old: new for new, old in enumerate(order)}
+        self._tables = {s: [new_id[p] for p in t]
+                        for s, t in self._tables.items()}
+        self._owner = {new_id[p]: s for p, s in self._owner.items()}
+        n_used = self.n_used
+        self._free = list(range(self.n_pages - 1, n_used, -1))
+        return src
+
+    # --- invariants -------------------------------------------------------
+    def check_invariants(self) -> None:
+        """null page never allocated; free/owned disjoint and exhaustive;
+        tables and owner map agree; no page in two tables."""
+        free = set(self._free)
+        owned = set(self._owner)
+        if len(free) != len(self._free):
+            raise PageError("duplicate page on the free list")
+        if NULL_PAGE in free or NULL_PAGE in owned:
+            raise PageError("null page leaked into free/owned sets")
+        if free & owned:
+            raise PageError(f"pages both free and owned: {free & owned}")
+        if free | owned != set(range(1, self.n_pages)):
+            raise PageError("page leak: free+owned != usable pages")
+        seen: Dict[int, int] = {}
+        for slot, table in self._tables.items():
+            for pg in table:
+                if pg in seen:
+                    raise PageError(
+                        f"page {pg} in tables of slots {seen[pg]} and {slot}")
+                seen[pg] = slot
+                if self._owner.get(pg) != slot:
+                    raise PageError(f"owner map disagrees for page {pg}")
+        if seen.keys() != owned:
+            raise PageError("owner map and tables cover different pages")
