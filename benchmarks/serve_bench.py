@@ -1,7 +1,7 @@
 """Serving hot-path benchmark: open-loop continuous batching on the smoke
 config, emitting JSON perf records so future PRs can track the serving path.
 
-Two modes:
+Three modes:
 
 - default: one elastic engine run (tokens/s, p50/p99 TTFT/TPOT).
 - ``--ab``: paged-vs-flat A/B on a mixed long/short-prompt workload — the
@@ -11,9 +11,16 @@ Two modes:
   moved, per-tick decode time, and page occupancy for both arms: the paged
   arm must move admitted-request-proportional bytes and decode faster per
   tick at equal token output.
+- ``--spec``: speculation on/off A/B on a repetitive-workload mix (looping
+  prompts, the prompt-lookup drafter's home turf, plus plain random
+  prompts).  Both arms run the paged engine on the SAME trace and must emit
+  bit-identical token streams; the record carries acceptance rate, accepted
+  tokens per tick, tokens per decode dispatch (the claim: speculation
+  raises useful work per dispatch >= 1.3x at equal output), per-tick decode
+  p50, and tokens/s.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--ab] [--fast]
-        [--dry-run] [--out serve_bench.json]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--ab | --spec]
+        [--fast] [--dry-run] [--out serve_bench.json]
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core import ElasticScalingPolicy, ScaleEvent
-from repro.serve import ServeEngine, poisson_arrivals, synthetic_requests
+from repro.serve import (Request, ServeEngine, poisson_arrivals,
+                         synthetic_requests)
 
 
 def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
@@ -166,10 +174,97 @@ def run_ab(arch: str = "smollm-360m", *, fast: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Speculation on/off A/B on a repetitive-workload mix
+# ---------------------------------------------------------------------------
+
+
+def _spec_workload(cfg, *, fast: bool, seed: int):
+    """Repetitive-workload mix: most prompts tile a short random motif
+    (prompt-lookup drafting locks onto the cycle), the rest are plain
+    random tokens (the drafter's worst case keeps the record honest)."""
+    if fast:
+        n_rep, n_rand, max_new, rate = 5, 2, (8, 14), 50.0
+    else:
+        n_rep, n_rand, max_new, rate = 14, 6, (16, 28), 30.0
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(n_rep, rate, rng=rng)
+    reqs = []
+    for i in range(n_rep):
+        motif = rng.integers(0, cfg.vocab_size,
+                             size=int(rng.integers(3, 6)))
+        plen = int(rng.integers(12, 25))
+        prompt = np.tile(motif, -(-plen // len(motif)))[:plen]
+        reqs.append(Request(rid=i, prompt=prompt.astype(np.int32),
+                            max_new_tokens=int(rng.integers(*max_new)),
+                            arrival_time=float(arr[i])))
+    reqs += synthetic_requests(
+        n_rand, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(n_rand, rate, rng=rng),
+        prompt_len=(8, 24), max_new_tokens=max_new, rng=rng, rid_base=1000)
+    return reqs
+
+
+def run_spec(arch: str = "smollm-360m", *, fast: bool = False,
+             dry_run: bool = False, spec_k: int = 4, seed: int = 0) -> dict:
+    cfg = smoke_variant(get_config(arch))
+    kw = dict(capacity=4 if dry_run else 8, cache_len=64, prefill_bucket=16,
+              n_workers=1, kv_layout="paged", seed=seed)
+    arms = {}
+    streams = {}
+    for mode in ("off", "ngram"):
+        engine = ServeEngine(cfg, spec=mode, spec_k=spec_k, **kw)
+        engine.run(_spec_workload(cfg, fast=fast or dry_run, seed=seed),
+                   max_ticks=40 if dry_run else 100_000)
+        s = engine.metrics.summarize()
+        decode = np.array([t.decode_s for t in engine.metrics.ticks
+                           if t.decode_s > 0])
+        streams[mode] = {r.rid: tuple(r.generated)
+                         for r in engine.metrics.requests}
+        arms[mode] = {
+            "tokens_generated": s["tokens_generated"],
+            "requests_finished": s["requests_finished"],
+            "decode_dispatches": s["decode_dispatches"],
+            "tokens_per_dispatch": s["tokens_per_dispatch"],
+            "spec_acceptance_rate": s["spec_acceptance_rate"],
+            "spec_accepted_total": s["spec_accepted_total"],
+            "spec_drafted_total": s["spec_drafted_total"],
+            "decode_step_p50_s": (float(np.percentile(decode, 50))
+                                  if len(decode) else None),
+            "tokens_per_s": s["tokens_per_s"],
+            "tpot_p50_s": s["tpot_p50_s"],
+            "wall_s": s["wall_s"],
+        }
+    off, on = arms["off"], arms["ngram"]
+    rec = {
+        "bench": "serve_bench_spec",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "spec_k": spec_k,
+        "off": off,
+        "ngram": on,
+        "streams_equal": streams["off"] == streams["ngram"],
+        "tokens_per_dispatch_ratio": (
+            on["tokens_per_dispatch"] / off["tokens_per_dispatch"]
+            if off["tokens_per_dispatch"] else None),
+        "dispatch_ratio": (off["decode_dispatches"]
+                           / max(on["decode_dispatches"], 1)),
+    }
+    if not dry_run:
+        assert rec["streams_equal"], \
+            "speculative and baseline greedy streams differ"
+        assert rec["tokens_per_dispatch_ratio"] >= 1.3, \
+            f"speculation gained only {rec['tokens_per_dispatch_ratio']:.2f}x " \
+            f"tokens/dispatch on the repetitive mix"
+    return rec
+
+
 def main(fast: bool = False) -> None:
     """Entry point for benchmarks.run registration."""
     print(json.dumps(run(requests=8 if fast else 24)))
     print(json.dumps(run_ab(fast=fast)))
+    print(json.dumps(run_spec(fast=fast)))
 
 
 def _cli() -> None:
@@ -183,6 +278,9 @@ def _cli() -> None:
     ap.add_argument("--no-elastic", action="store_true")
     ap.add_argument("--ab", action="store_true",
                     help="paged-vs-flat A/B on the mixed workload")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculation on/off A/B on the repetitive mix")
+    ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
                     help="build + a few ticks only (CI wiring check)")
@@ -192,6 +290,9 @@ def _cli() -> None:
     if args.ab:
         rec = run_ab(args.arch, fast=args.fast, dry_run=args.dry_run,
                      seed=args.seed)
+    elif args.spec:
+        rec = run_spec(args.arch, fast=args.fast, dry_run=args.dry_run,
+                       spec_k=args.spec_k, seed=args.seed)
     else:
         rec = run(args.arch, requests=args.requests, rate=args.rate,
                   capacity=args.capacity, elastic=not args.no_elastic,

@@ -18,6 +18,9 @@ python -m repro.kernels.paged_attention --selftest
 echo "== paged-vs-flat serve A/B (dry run) =="
 python benchmarks/serve_bench.py --ab --dry-run
 
+echo "== speculative-decode on/off A/B (dry run) =="
+python benchmarks/serve_bench.py --spec --dry-run
+
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast
 python benchmarks/cluster_bench.py --dry-run

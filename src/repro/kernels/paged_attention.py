@@ -1,24 +1,30 @@
 """Paged-attention decode Pallas TPU kernel (block-table gather, O(live)).
 
-One query token per sequence attends a KV cache scattered across fixed-size
-physical pages.  The block table is SCALAR-PREFETCHED
+One QUERY SPAN per sequence (Q=1 plain decode; Q=k+1 speculative
+verification, where the span is [current token, k draft tokens]) attends a
+KV cache scattered across fixed-size physical pages.  The block table and
+per-sequence lengths/query-start positions are SCALAR-PREFETCHED
 (`pltpu.PrefetchScalarGridSpec`) so the k/v BlockSpec index_maps can chase
-it: grid step (b, h, p) DMAs exactly the physical page backing sequence b's
-p-th logical page — the kernel never touches pages the sequence does not
-own.  Pages past a sequence's live length are clamped to the last live page
-in the index_map (a repeated block index, so the pipeline skips the re-DMA)
-and their compute is skipped with `pl.when`: per-sequence work is
+them: grid step (b, h, p) DMAs exactly the physical page backing sequence
+b's p-th logical page — the kernel never touches pages the sequence does
+not own.  Pages past a sequence's live length are clamped to the last live
+page in the index_map (a repeated block index, so the pipeline skips the
+re-DMA) and their compute is skipped with `pl.when`: per-sequence work is
 O(live tokens), not O(pool capacity).
 
 Head layout is grouped-GQA like kernels/flash_attention.py: q is
-(B, KV, G, hd) with the G query heads of kv head `kv` contracting against
-the COMPACT page pool (no head-expansion gather, 1x kv-page traffic).
-Online-softmax state (acc/m/l per (b, kv)) lives in VMEM scratch across the
-page steps, which form the innermost (sequential) grid dimension.
+(B, KV, Q*G, hd) with the G query heads of kv head `kv` contracting against
+the COMPACT page pool (no head-expansion gather, 1x kv-page traffic).  The
+Q query positions of a span ride along the row dim — row r is query
+position r // G at absolute position q_start[b] + r // G, and each row
+carries its own causal/sliding-window mask, so verifying k drafts costs ONE
+page sweep instead of k+1.  Online-softmax state (acc/m/l per (b, kv))
+lives in VMEM scratch across the page steps, which form the innermost
+(sequential) grid dimension.
 
-Block shapes are (G, hd)/(page_size, hd) — production sizing should pick
-page_size and G*hd at MXU/VPU multiples; correctness is validated on CPU in
-interpret mode against kernels.ref.paged_attention_ref
+Block shapes are (Q*G, hd)/(page_size, hd) — production sizing should pick
+page_size and Q*G*hd at MXU/VPU multiples; correctness is validated on CPU
+in interpret mode against kernels.ref.paged_attention_ref
 (`python -m repro.kernels.paged_attention --selftest`).
 """
 from __future__ import annotations
@@ -38,12 +44,13 @@ def _live_pages(length, page_size: int):
     return (length + page_size - 1) // page_size
 
 
-def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+def _paged_kernel(table_ref, len_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref,
                   acc_ref, m_ref, l_ref, *, sm_scale: float, page_size: int,
-                  window: int):
+                  window: int, q_span: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
-    G = q_ref.shape[2]
+    QG = q_ref.shape[2]
+    G = QG // q_span
 
     @pl.when(p == 0)
     def _init():
@@ -57,15 +64,18 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(p < n_live)
     def _accumulate():
-        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+        q = q_ref[0, 0].astype(jnp.float32)        # (Q*G, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
         k_pos = p * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (G, page_size), 1)
-        ok = k_pos < length  # tail of the last page
-        if window:  # sliding window from the query at position length-1
-            ok &= (length - 1 - k_pos) < window
+            jnp.int32, (QG, page_size), 1)
+        # row r is query position r // G at absolute position q_start + r//G
+        q_abs = qstart_ref[b] + jax.lax.broadcasted_iota(
+            jnp.int32, (QG, page_size), 0) // G
+        ok = (k_pos <= q_abs) & (k_pos < length)  # causal + live tail
+        if window:  # sliding window from each query's own position
+            ok &= (q_abs - k_pos) < window
         s = jnp.where(ok, s, NEG_INF)
 
         m_prev, l_prev = m_ref[...], l_ref[...]
@@ -83,53 +93,67 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret", "q_span"))
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_table: jax.Array, lengths: jax.Array, *,
-                    window: int = 0, interpret: bool = True) -> jax.Array:
-    """q: (B, KV, G, hd); k_pages/v_pages: (N, page_size, KV, hd);
+                    window: int = 0, interpret: bool = True,
+                    q_span: int = 1,
+                    q_start: jax.Array | None = None) -> jax.Array:
+    """q: (B, KV, q_span*G, hd) — `q_span` query positions per sequence, the
+    G heads of each position packed contiguously (position-major rows);
+    k_pages/v_pages: (N, page_size, KV, hd);
     block_table: (B, P) int32 physical page ids (-1 = absent);
-    lengths: (B,) int32 live tokens (query at position lengths-1);
+    lengths: (B,) int32 live tokens INCLUDING the span's writes;
+    q_start: (B,) int32 absolute position of each span's first query
+    (default lengths - q_span, the contiguous tail);
     window: sliding-window size (0 = full causal context).
 
-    Returns (B, KV, G, hd).  Rows with length 0 return zeros.
+    Returns (B, KV, q_span*G, hd).  Rows with length 0 return zeros.
     """
-    B, KV, G, hd = q.shape
+    B, KV, QG, hd = q.shape
     N, page_size, KVp, hdp = k_pages.shape
     assert (KV, hd) == (KVp, hdp) and v_pages.shape == k_pages.shape
+    assert QG % q_span == 0, (QG, q_span)
     P = block_table.shape[1]
     sm_scale = 1.0 / math.sqrt(hd)
+    lengths = lengths.astype(jnp.int32)
+    if q_start is None:
+        q_start = lengths - q_span
 
-    def kv_map(b, h, p, table, lens):
+    def kv_map(b, h, p, table, lens, qstart):
         n_live = _live_pages(lens[b], page_size)
         pc = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
         return (jnp.maximum(table[b, pc], 0), 0, h, 0)
 
+    def q_map(b, h, p, table, lens, qstart):
+        return (b, h, 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, KV, P),
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, table, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, QG, hd), q_map),
             pl.BlockSpec((1, page_size, 1, hd), kv_map),
             pl.BlockSpec((1, page_size, 1, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, h, p, table, lens: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, QG, hd), q_map),
         scratch_shapes=[
-            pltpu.VMEM((G, hd), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((QG, hd), jnp.float32),
+            pltpu.VMEM((QG,), jnp.float32),
+            pltpu.VMEM((QG,), jnp.float32),
         ],
     )
     kernel = functools.partial(_paged_kernel, sm_scale=sm_scale,
-                               page_size=page_size, window=window)
+                               page_size=page_size, window=window,
+                               q_span=q_span)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KV, QG, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
+    )(block_table.astype(jnp.int32), lengths,
+      q_start.astype(jnp.int32), q, k_pages, v_pages)
 
 
 def _selftest() -> None:
@@ -139,14 +163,18 @@ def _selftest() -> None:
     from . import ref
 
     rng = np.random.default_rng(0)
-    for (B, KV, G, hd, ps, P, win) in [(3, 2, 4, 32, 8, 4, 0),
-                                       (2, 1, 8, 64, 16, 3, 0),
-                                       (4, 2, 2, 32, 8, 8, 16)]:
+    for (B, KV, G, hd, ps, P, win, Q) in [(3, 2, 4, 32, 8, 4, 0, 1),
+                                          (2, 1, 8, 64, 16, 3, 0, 1),
+                                          (4, 2, 2, 32, 8, 8, 16, 1),
+                                          (3, 2, 4, 32, 8, 4, 0, 3),
+                                          (2, 2, 2, 32, 8, 6, 16, 4)]:
         N = B * P + 1
-        q = jnp.asarray(rng.standard_normal((B, KV, G, hd)), jnp.float32)
+        q = jnp.asarray(rng.standard_normal((B, KV, Q * G, hd)), jnp.float32)
         kp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
         vp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
-        lengths = rng.integers(0, P * ps + 1, size=B)
+        lengths = rng.integers(Q, P * ps + 1, size=B)
+        if Q == 1:
+            lengths[rng.integers(B)] = 0  # keep an inactive row in the mix
         perm = rng.permutation(np.arange(1, N))  # pages deliberately shuffled
         table = np.full((B, P), -1, np.int32)
         used = 0
@@ -156,14 +184,15 @@ def _selftest() -> None:
             used += n
         out = paged_attention(q, kp, vp, jnp.asarray(table),
                               jnp.asarray(lengths, jnp.int32), window=win,
-                              interpret=True)
+                              q_span=Q, interpret=True)
         want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(table),
                                        jnp.asarray(lengths, jnp.int32),
-                                       window=win)
+                                       window=win, q_span=Q)
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
         print(f"paged_attention parity OK: B={B} KV={KV} G={G} hd={hd} "
-              f"ps={ps} P={P} window={win} lengths={lengths.tolist()}")
+              f"ps={ps} P={P} window={win} q_span={Q} "
+              f"lengths={lengths.tolist()}")
 
 
 if __name__ == "__main__":

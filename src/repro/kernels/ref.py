@@ -34,30 +34,38 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         block_table: jax.Array, lengths: jax.Array, *,
-                        window: int = 0) -> jax.Array:
-    """Paged single-token decode attention, gather-then-softmax oracle.
+                        window: int = 0, q_span: int = 1,
+                        q_start: jax.Array | None = None) -> jax.Array:
+    """Paged decode attention, gather-then-softmax oracle.
 
-    q: (B, KV, G, hd) — one query token per sequence, grouped head layout
-    (q head (kv, g) attends kv head kv); k_pages/v_pages: (N, ps, KV, hd)
-    physical page pools; block_table: (B, P) int32 physical page ids (-1 =
-    absent, masked); lengths: (B,) int32 live tokens per sequence (the query
-    sits at position lengths-1); window: sliding-window size (0 = full).
-    Rows with length 0 return zeros.
+    q: (B, KV, q_span*G, hd) — `q_span` query positions per sequence in the
+    grouped head layout (row j*G+g is query position j's head (kv, g));
+    k_pages/v_pages: (N, ps, KV, hd) physical page pools; block_table:
+    (B, P) int32 physical page ids (-1 = absent, masked); lengths: (B,)
+    int32 live tokens per sequence (including the span's own tokens);
+    q_start: (B,) absolute position of each span's first query (default
+    lengths - q_span, the contiguous tail); window: sliding-window size
+    (0 = full).  Rows with length 0 return zeros.
     """
-    B, KV, G, hd = q.shape
+    B, KV, QG, hd = q.shape
+    G = QG // q_span
     _, ps, _, _ = k_pages.shape
     P = block_table.shape[1]
+    if q_start is None:
+        q_start = lengths - q_span
     tbl = jnp.maximum(block_table, 0)
     k = jnp.take(k_pages, tbl, axis=0).reshape(B, P * ps, KV, hd)
     v = jnp.take(v_pages, tbl, axis=0).reshape(B, P * ps, KV, hd)
     scale = 1.0 / math.sqrt(hd)
     s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    pos = jnp.arange(P * ps)[None]
-    ok = pos < lengths[:, None]  # (B, S)
+    pos = jnp.arange(P * ps)[None]  # (1, S)
+    q_abs = q_start[:, None] + jnp.arange(QG)[None] // G  # (B, Q*G)
+    ok = ((pos < lengths[:, None])[:, None, :]  # live tail
+          & (pos[:, None, :] <= q_abs[..., None]))  # per-row causal
     if window:
-        ok &= (lengths[:, None] - 1 - pos) < window
-    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        ok &= (q_abs[..., None] - pos[:, None, :]) < window
+    s = jnp.where(ok[:, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
     out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)

@@ -68,7 +68,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           max_new_tokens: Tuple[int, int] = (4, 12),
           workers: int = 1, scale_events: Optional[str] = None,
           straggler_policy: bool = False, kv_layout: str = "flat",
-          page_size: int = 8, seed: int = 0) -> Dict:
+          page_size: int = 8, spec: str = "off", spec_k: int = 4,
+          seed: int = 0) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary."""
     cfg = get_config(arch)
     cfg = smoke_variant(cfg) if smoke else scale_config(cfg, scale)
@@ -91,7 +92,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
     engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
                          prefill_bucket=prefill_bucket, n_workers=workers,
                          policies=policies, kv_layout=kv_layout,
-                         page_size=page_size, seed=seed)
+                         page_size=page_size, spec=spec, spec_k=spec_k,
+                         seed=seed)
     metrics = engine.run(reqs)
     out = metrics.summarize()
     out["arch"] = arch
@@ -126,6 +128,13 @@ def main() -> None:
                     help="paged = block-table KV pool + chunked prefill")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (paged layout)")
+    ap.add_argument("--spec", default="off", choices=["off", "ngram", "draft"],
+                    help="speculative decode drafter (lossless greedy); "
+                         "'draft' without trained draft params is a plumbing "
+                         "demo (~0 acceptance) — use the ServeEngine API's "
+                         "draft_params for real draft-model speculation")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed/verified per tick")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true", help="print raw JSON")
     args = ap.parse_args()
@@ -139,7 +148,7 @@ def main() -> None:
                 scale_events=args.scale_events,
                 straggler_policy=args.straggler_policy,
                 kv_layout=args.kv_layout, page_size=args.page_size,
-                seed=args.seed)
+                spec=args.spec, spec_k=args.spec_k, seed=args.seed)
     if args.json:
         print(json.dumps(out, indent=2))
         return
@@ -152,6 +161,11 @@ def main() -> None:
           f"p99 {_fmt_ms(out['tpot_p99_s'])}")
     print(f"  occupancy {out['occupancy_mean']:.2f} over {out['n_ticks']} "
           f"ticks; scale events {out['scale_events']}")
+    if out["spec_drafted_total"]:
+        print(f"  spec: acceptance {out['spec_acceptance_rate']:.2f} "
+              f"({out['spec_accepted_total']}/{out['spec_drafted_total']} "
+              f"drafts), {out['tokens_per_dispatch']:.2f} tokens/dispatch "
+              f"over {out['decode_dispatches']} dispatches")
 
 
 if __name__ == "__main__":

@@ -333,7 +333,8 @@ def paged_decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
 def paged_prefill_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
                         offset: jax.Array, chunk_end: jax.Array,
                         table: jax.Array, *, rules: AxisRules,
-                        window: Optional[int] = None
+                        window: Optional[int] = None,
+                        impl: str = "xla"
                         ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One chunk of an incremental (chunked) prefill.
 
@@ -359,7 +360,7 @@ def paged_prefill_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
         bp, bc = xs
         x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table,
                                            chunk_end, bc, window=win,
-                                           rules=rules)
+                                           rules=rules, impl=impl)
         return x, new_bc
 
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
@@ -367,6 +368,98 @@ def paged_prefill_chunk(cfg: ModelConfig, params, cache, tokens: jax.Array,
     last = jnp.clip(chunk_end - offset - 1, 0, C - 1).astype(jnp.int32)
     last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
     return last_logits, dict(cache, blocks=new_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Speculative verification (one batched forward over k+1 draft positions)
+# ---------------------------------------------------------------------------
+
+
+def verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                pos: jax.Array, n_new: jax.Array, *, rules: AxisRules,
+                window: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Flat-layout speculative verification: score a SPAN of Q candidate
+    tokens per row in ONE forward instead of Q sequential decodes.
+
+    tokens: (B, Q) int32 — [current token, draft_1..draft_{Q-1}] per row,
+    right-padded; pos: (B,) absolute position of each row's first token
+    (its pending KV write position); n_new: (B,) real tokens in the span
+    (1 + accepted-draft budget; 0 = inactive row, nothing written).
+
+    Requires the per-row (B, cache_len) k_pos cache from
+    ``init_cache(per_slot=True)`` / ``prefill(true_len=...)``.  Position j's
+    logits equal a sequential `decode_step` at that position bit-for-bit
+    (drafts beyond a mismatch are causally invisible to earlier positions,
+    so rollback is just "ignore the tail").  Returns (logits (B, Q, V),
+    new cache)."""
+    bt = _block_type(cfg)
+    if bt not in ("dense", "moe"):
+        raise NotImplementedError(f"verify supports dense/moe; got {bt!r}")
+    B, Q = tokens.shape
+    win = cfg.sliding_window if window is None else window
+    q_pos = pos.astype(jnp.int32)[:, None] + jnp.arange(Q, dtype=jnp.int32)
+    valid = jnp.arange(Q, dtype=jnp.int32)[None] < n_new[:, None]
+    x = _embed(cfg, params, tokens)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", None, None))
+
+    k_pos = cache["k_pos"]
+    if k_pos.ndim != 2:
+        raise ValueError("verify_step needs a per-row k_pos — build the "
+                         "cache with init_cache(per_slot=True) or "
+                         "prefill(true_len=...)")
+    W = k_pos.shape[-1]
+    rows = jnp.arange(B)[:, None]
+    # invalid OR out-of-range positions index past W and are dropped —
+    # never clamped onto the last live row
+    idx = jnp.where(valid, q_pos, W)
+    k_pos = k_pos.at[rows, idx].set(q_pos, mode="drop")
+
+    def body(x, xs):
+        bp, bc = xs
+        x, new_bc = tfm.block_verify(cfg, bp, x, q_pos, valid, k_pos, bc,
+                                     window=win, rules=rules)
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    logits = _logits(cfg, params, x)
+    return logits, dict(cache, blocks=new_blocks, k_pos=k_pos)
+
+
+def paged_verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                      pos: jax.Array, table: jax.Array, lengths: jax.Array,
+                      *, rules: AxisRules, window: Optional[int] = None,
+                      impl: str = "xla") -> Tuple[jax.Array, Dict[str, Any]]:
+    """Paged-layout speculative verification: the (B, Q) span twin of
+    `paged_decode_step`, scoring all draft positions through
+    `transformer.block_decode_paged` (XLA gather or the Pallas paged kernel
+    with q_span=Q) in a single dispatch.
+
+    tokens: (B, Q) int32 — [current token, draft_1..draft_{Q-1}] per row;
+    pos: (B,) absolute position of each row's first token; table: (B, P)
+    block table; lengths: (B,) live tokens INCLUDING the span's real tokens
+    (pos + n_new; 0 = inactive row).  Draft padding past a row's length
+    routes its writes to the null page and is causally invisible to valid
+    positions.  Returns (logits (B, Q, V), new cache)."""
+    win = cfg.sliding_window if window is None else window
+    B, Q = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if rules is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, rules.sharding("batch", None, None))
+    q_pos = pos.astype(jnp.int32)[:, None] + jnp.arange(Q, dtype=jnp.int32)
+
+    def body(x, xs):
+        bp, bc = xs
+        x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table, lengths,
+                                           bc, window=win, rules=rules,
+                                           impl=impl)
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    return _logits(cfg, params, x), dict(cache, blocks=new_blocks)
 
 
 def prefill(cfg: ModelConfig, params, tokens: jax.Array, *,

@@ -417,17 +417,23 @@ def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
     ck = cache["k"].at[pg, off].set(k.reshape((B * Q,) + k.shape[2:]))
     cv = cache["v"].at[pg, off].set(v.reshape((B * Q,) + v.shape[2:]))
 
-    if impl == "pallas" and Q == 1:
+    if impl == "pallas":
         kind, HP, g_pad = attn.head_layout(cfg)
         if kind != "grouped":
             raise NotImplementedError(
                 "pallas paged decode needs the grouped head layout")
         from ..kernels.paged_attention import paged_attention
-        qg = q.reshape(B, cfg.kv_heads(), g_pad, cfg.head_dim_())
+        KVh, hd = cfg.kv_heads(), cfg.head_dim_()
+        # (B, Q, KV*g_pad, hd) -> (B, KV, Q*g_pad, hd): the kernel rides the
+        # Q span along the row dim, position-major (row j*g_pad+g)
+        qg = (q.reshape(B, Q, KVh, g_pad, hd)
+              .transpose(0, 2, 1, 3, 4).reshape(B, KVh, Q * g_pad, hd))
         ctx = paged_attention(qg, ck, cv, table, lengths, window=window,
+                              q_span=Q, q_start=q_pos[:, 0],
                               interpret=jax.default_backend() != "tpu")
         _, hmask = attn.head_maps(cfg)
-        ctx = ctx.reshape(B, 1, HP, cfg.head_dim_())
+        ctx = (ctx.reshape(B, KVh, Q, g_pad, hd)
+               .transpose(0, 2, 1, 3, 4).reshape(B, Q, HP, hd))
         ctx = ctx * hmask[None, None, :, None].astype(ctx.dtype)
     else:
         kseq = attn.gather_pages(ck, table)
@@ -435,6 +441,52 @@ def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
         k_pos = attn.paged_k_pos(lengths, P * ps)
         ctx = attn.decode_attention(cfg, q, kseq, vseq, q_pos, k_pos,
                                     window=window)
+    x = x + attn.attn_out(bp["attn"], ctx, rules)
+    h2 = rms_norm(x, bp["ln2"])
+    if bt == "moe":
+        f, _ = moe_mod.moe_ffn(cfg, bp["moe"], h2, rules)
+    else:
+        f = swiglu(h2, bp["mlp"]["gate"], bp["mlp"]["up"], bp["mlp"]["down"],
+                   rules)
+    return x + f, dict(cache, k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
+# Block apply: flat-cache multi-token verify (speculative decode)
+# ---------------------------------------------------------------------------
+
+
+def block_verify(cfg: ModelConfig, bp, x, q_pos, valid, k_pos, cache, *,
+                 window=0, rules: AxisRules = None):
+    """Flat-cache block step over a SPAN of new tokens x: (B, Q, D) at
+    per-row positions q_pos: (B, Q) — the speculative-verify twin of
+    `block_decode` (Q=1) on the (B, cache_len) per-slot cache layout.
+
+    valid: (B, Q) bool marks real tokens; invalid positions (draft padding,
+    inactive rows) write NOTHING (out-of-bounds scatter with mode="drop")
+    and their outputs are garbage the caller discards.  Each valid query
+    attends the row's previous context plus the span's earlier tokens
+    (causal by absolute position via k_pos/q_pos), so the Q logits match Q
+    sequential `block_decode` calls bit-for-bit.  dense/moe only.
+    """
+    bt = cfg.family
+    if bt not in ("dense", "moe"):
+        raise NotImplementedError(f"verify supports dense/moe; got {bt!r}")
+    B, Q, _ = x.shape
+    W = cache["k"].shape[1]
+
+    h_in = rms_norm(x, bp["ln1"])
+    q, k, v = attn.qkv_project(cfg, bp["attn"], h_in, q_pos, rules=rules)
+    # scatter the span's K/V rows at their absolute positions; invalid
+    # rows index out of bounds and are dropped (no null row in the flat
+    # layout, so masked writes must not land anywhere)
+    rows = jnp.arange(B)[:, None]
+    # out-of-range valid positions drop too (fail-safe, never clamp onto
+    # the newest live row)
+    idx = jnp.where(valid, q_pos, W)
+    ck = cache["k"].at[rows, idx].set(k, mode="drop")
+    cv = cache["v"].at[rows, idx].set(v, mode="drop")
+    ctx = attn.decode_attention(cfg, q, ck, cv, q_pos, k_pos, window=window)
     x = x + attn.attn_out(bp["attn"], ctx, rules)
     h2 = rms_norm(x, bp["ln2"])
     if bt == "moe":

@@ -12,8 +12,11 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 slot-chunk -> worker map obeys the same scheduler-phase
                 ownership contract as training chunks)
 - `pages`     — paged KV bookkeeping: fixed-size token pages, per-slot
-                block tables, alloc/free/defrag with SlotPool-style
+                block tables, alloc/free/trim/defrag with SlotPool-style
                 invariant checks (page 0 reserved as the null write sink)
+- `spec`      — speculative decoding: pluggable drafters (prompt-lookup
+                n-gram, tiny draft model) + lossless greedy accept; slots
+                verify k drafts per tick in ONE (B, k+1) dispatch
 - `engine`    — `ServeEngine`: carries KV state across `resize(k)` events
                 (per-k jit cache + device_put resharding, mirroring
                 `launch.elastic.ElasticTrainer`), supports flat and PAGED
@@ -29,9 +32,11 @@ from .request import (Request, RequestState, poisson_arrivals,
                       synthetic_requests, trace_arrivals)
 from .scheduler import SlotScheduler
 from .slots import SlotPool
+from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 __all__ = [
-    "PageAllocator", "PageError", "Request", "RequestState", "ServeEngine",
-    "ServeMetrics", "SlotPool", "SlotScheduler", "poisson_arrivals",
+    "DraftModelDrafter", "NgramDrafter", "PageAllocator", "PageError",
+    "Request", "RequestState", "ServeEngine", "ServeMetrics", "SlotPool",
+    "SlotScheduler", "greedy_accept", "poisson_arrivals",
     "synthetic_requests", "trace_arrivals",
 ]

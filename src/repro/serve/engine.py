@@ -21,7 +21,16 @@ Two KV layouts share the scheduler and metrics:
   gathers K/V through the block table and attends only over pages live in
   this batch (table width bucketed, so work tracks live tokens instead of
   pool capacity), and long prompts prefill in chunks interleaved with
-  decode ticks so one long admission cannot stall in-flight streams.
+  decode ticks so one long admission cannot stall in-flight streams
+  (mid-prefill slots sharing a table-width bucket batch into one forward).
+
+With ``spec="ngram"|"draft"`` (see `serve.spec`) the solver phase turns
+speculative: every slot proposes up to `spec_k` draft tokens per tick and
+ONE (B, Q=spec_k+1) verify dispatch scores them all; the longest matching
+draft prefix plus the model's own correction is emitted — bit-identical to
+sequential greedy, up to k+1 tokens per dispatch.  Rejected tails roll back
+on the host (lengths/positions) and pages allocated solely for rejected
+drafts return to the free list.
 
 Elasticity mirrors `launch.elastic.ElasticTrainer`: `resize(k)` rebuilds the
 mesh over the first min(k, n_devices) devices, re-shards params + the KV
@@ -45,9 +54,10 @@ from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
 from ..models import model as M
 from ..sharding import AxisRules
-from .pages import PageAllocator
+from .pages import PageAllocator, next_pow2
 from .request import Request, RequestState
 from .scheduler import SlotScheduler
+from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 # families with a flat (B, cache_len) attention cache; recurrent-state
 # families (ssm/hybrid) need exact-length prefill and are follow-on work
@@ -66,7 +76,11 @@ class TickRecord:
     tokens_emitted: int
     admission_bytes: int = 0  # modeled device bytes written by admission
     prefill_chunks: int = 0  # chunked-prefill chunks advanced this tick
+    prefill_dispatches: int = 0  # batched chunk forwards issued this tick
     page_occupancy: float = 0.0  # live fraction of the KV page pool
+    spec_drafted: int = 0  # draft tokens proposed this tick
+    spec_accepted: int = 0  # draft tokens verification accepted this tick
+    draft_dispatches: int = 0  # device dispatches spent DRAFTING this tick
 
 
 @dataclasses.dataclass
@@ -90,6 +104,14 @@ class ServeMetrics:
         pct = (lambda a, q: float(np.percentile(a, q)) if len(a) else None)
         occ = np.array([t.occupancy for t in self.ticks])
         pocc = np.array([t.page_occupancy for t in self.ticks])
+        emitted = sum(t.tokens_emitted for t in self.ticks)
+        # per-dispatch efficiency charges the drafter's own model dispatches
+        # too (draft-model speculation pays 2 dispatches/tick; ngram 1)
+        draft_disp = sum(t.draft_dispatches for t in self.ticks)
+        dispatches = sum(1 for t in self.ticks if t.tokens_emitted) \
+            + draft_disp
+        drafted = sum(t.spec_drafted for t in self.ticks)
+        accepted = sum(t.spec_accepted for t in self.ticks)
         return {
             "requests_finished": len(done),
             "requests_total": len(self.requests),
@@ -105,6 +127,16 @@ class ServeMetrics:
                                              for t in self.ticks)),
             "prefill_chunks_total": int(sum(t.prefill_chunks
                                             for t in self.ticks)),
+            "prefill_dispatches_total": int(sum(t.prefill_dispatches
+                                                for t in self.ticks)),
+            # speculative decode: useful work per decode dispatch
+            "decode_dispatches": int(dispatches),
+            "draft_dispatches": int(draft_disp),
+            "tokens_per_dispatch": (emitted / dispatches if dispatches
+                                    else 0.0),
+            "spec_drafted_total": int(drafted),
+            "spec_accepted_total": int(accepted),
+            "spec_acceptance_rate": (accepted / drafted if drafted else None),
             "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
             "scale_events": [list(e) for e in self.scale_events],
@@ -138,6 +170,11 @@ class ServeEngine:
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
                  paged_impl: str = "xla",
+                 spec: str = "off", spec_k: int = 4,
+                 drafter: Optional[Any] = None,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params: Optional[Any] = None,
+                 debug_checks: bool = False,
                  max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
@@ -146,6 +183,9 @@ class ServeEngine:
         if kv_layout not in ("flat", "paged"):
             raise ValueError(f"kv_layout must be 'flat' or 'paged', "
                              f"got {kv_layout!r}")
+        if spec not in ("off", "ngram", "draft"):
+            raise ValueError(f"spec must be 'off', 'ngram' or 'draft', "
+                             f"got {spec!r}")
         self.cfg = cfg
         self.capacity = capacity
         self.cache_len = cache_len
@@ -179,6 +219,39 @@ class ServeEngine:
         # external simulation clock (cluster orchestrator); None = wall clock
         self._clock = clock
         self.suspended = False
+        self.debug_checks = debug_checks
+
+        # speculative decode: each slot proposes spec_k drafts per tick and
+        # ONE (B, Q=spec_k+1) verify dispatch scores them all; the drafter
+        # never affects the token stream, only the acceptance rate
+        self.spec_k = int(spec_k) if (spec != "off" or drafter is not None) \
+            else 0
+        if self.spec_k <= 0:
+            self.drafter = None
+            self.spec_k = 0
+        elif drafter is not None:
+            self.drafter = drafter
+        elif spec == "draft":
+            if draft_params is None:
+                # a freshly initialized draft model shares nothing with the
+                # target: the plumbing runs end-to-end but acceptance is ~0,
+                # making speculation pure overhead until trained (or
+                # distilled) draft params are supplied
+                import warnings
+                warnings.warn(
+                    "spec='draft' without draft_params uses a randomly "
+                    "initialized draft model — acceptance will be ~0 and "
+                    "speculation slower than spec='off'; pass draft_params "
+                    "(a trained/distilled draft model) or use spec='ngram'",
+                    stacklevel=2)
+                if draft_cfg is None:
+                    draft_cfg = dataclasses.replace(
+                        cfg, name=cfg.name + "-draft",
+                        num_layers=max(1, cfg.num_layers // 2))
+            self.drafter = DraftModelDrafter(draft_cfg or cfg, draft_params,
+                                             seed=seed)
+        else:  # spec == "ngram"
+            self.drafter = NgramDrafter()
 
         self.max_pages_per_slot = cache_len // page_size
         if kv_layout == "paged":
@@ -233,7 +306,15 @@ class ServeEngine:
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 return nxt, new_cache["blocks"]
 
-            return mesh, rules, jax.jit(decode, donate_argnums=(1,))
+            def verify(params, blocks, tok, pos, table, lengths):
+                logits, new_cache = M.paged_verify_step(
+                    cfg, params, {"blocks": blocks}, tok, pos, table,
+                    lengths, rules=rules, impl=impl)
+                return (jnp.argmax(logits, -1).astype(jnp.int32),
+                        new_cache["blocks"])
+
+            return (mesh, rules, jax.jit(decode, donate_argnums=(1,)),
+                    jax.jit(verify, donate_argnums=(1,)))
 
         def decode(params, blocks, k_pos, tok, pos):
             cache = {"blocks": blocks, "k_pos": k_pos}
@@ -242,7 +323,15 @@ class ServeEngine:
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
             return nxt, new_cache["blocks"], new_cache["k_pos"]
 
-        return mesh, rules, jax.jit(decode, donate_argnums=(1, 2))
+        def verify(params, blocks, k_pos, tok, pos, n_new):
+            cache = {"blocks": blocks, "k_pos": k_pos}
+            logits, new_cache = M.verify_step(cfg, params, cache, tok, pos,
+                                              n_new, rules=rules)
+            return (jnp.argmax(logits, -1).astype(jnp.int32),
+                    new_cache["blocks"], new_cache["k_pos"])
+
+        return (mesh, rules, jax.jit(decode, donate_argnums=(1, 2)),
+                jax.jit(verify, donate_argnums=(1, 2)))
 
     def _cache_sharding(self, mesh: Mesh):
         """Flat pool: shard the slot (batch) dim over data when capacity
@@ -285,9 +374,9 @@ class ServeEngine:
         if self.scheduler.n_workers != k:
             self.scheduler.set_workers(k)
         km = self._k_mesh(k)
-        mesh, rules, _ = _lru_get(self._k_cache, km,
-                                  lambda: self._build(km),
-                                  self.max_cached_meshes)
+        mesh, rules, _, _ = _lru_get(self._k_cache, km,
+                                     lambda: self._build(km),
+                                     self.max_cached_meshes)
         self._evict_stale()
         if mesh is not self.mesh:
             self.params = jax.device_put(self.params,
@@ -299,6 +388,10 @@ class ServeEngine:
                 blocks_s, row_s = self._cache_sharding(mesh)
                 self.blocks = jax.device_put(self.blocks, blocks_s)
                 self.k_pos = jax.device_put(self.k_pos, row_s)
+            if self.drafter is not None:
+                # speculation state moves with the pool (draft params for
+                # the draft-model drafter; host-only drafters no-op)
+                self.drafter.on_resize(mesh, rules)
         self.k, self.mesh, self.rules = k, mesh, rules
         self._stamp_cache_sizes()
 
@@ -310,10 +403,13 @@ class ServeEngine:
     def _page_bucket(self, n_pages: int) -> int:
         """Block-table width bucket: next power of two, so the per-width
         decode/chunk retrace count stays logarithmic in cache_len."""
-        p = 1
-        while p < max(n_pages, 1):
-            p *= 2
-        return min(p, self.max_pages_per_slot)
+        return min(next_pow2(max(n_pages, 1)), self.max_pages_per_slot)
+
+    def _n_bucket(self, n: int) -> int:
+        """Batch-size bucket for grouped chunk forwards: next power of two
+        (capped at capacity), the same trick the admission path uses to
+        bound per-batch-size retraces."""
+        return min(next_pow2(max(n, 1)), self.capacity)
 
     def _prefill_fn(self, bucket: int):
         km = self._k_mesh(self.k)
@@ -358,22 +454,22 @@ class ServeEngine:
         return _lru_get(self._insert_cache, (km, n, bucket), build,
                         self.max_cached_fns)
 
-    def _chunk_fn(self, chunk: int, table_width: int):
+    def _chunk_fn(self, chunk: int, table_width: int, n: int):
         km = self._k_mesh(self.k)
-        cfg, rules = self.cfg, self.rules
+        cfg, rules, impl = self.cfg, self.rules, self.paged_impl
 
         def build():
             def step(params, blocks, tokens, offset, chunk_end, table):
                 last, new_cache = M.paged_prefill_chunk(
                     cfg, params, {"blocks": blocks}, tokens, offset,
-                    chunk_end, table, rules=rules)
+                    chunk_end, table, rules=rules, impl=impl)
                 nxt = jnp.argmax(last[:, -1], -1).astype(jnp.int32)
                 return nxt, new_cache["blocks"]
 
             return jax.jit(step, donate_argnums=(1,))
 
-        return _lru_get(self._chunk_cache, (km, chunk, table_width), build,
-                        self.max_cached_fns)
+        return _lru_get(self._chunk_cache, (km, chunk, table_width, n),
+                        build, self.max_cached_fns)
 
     @property
     def _page_bytes(self) -> int:
@@ -461,40 +557,62 @@ class ServeEngine:
                 self._start_decoding(r, int(nxt[i]), now)
         return nbytes
 
-    def _advance_prefills(self) -> Tuple[int, int]:
+    def _advance_prefills(self) -> Tuple[int, int, int]:
         """Advance every mid-prefill request by ONE page-aligned chunk (so
         prefill work interleaves with decode instead of monopolizing the
-        tick).  Returns (chunks processed, modeled KV bytes written)."""
-        n_chunks = 0
+        tick).  Slots sharing a (chunk, table-width) bucket are BATCHED
+        into one forward, padded to a power-of-two batch bucket (rows with
+        chunk_end 0 are inert: their writes route to the null page) so the
+        per-group retrace count stays bounded like the admission path's.
+        Returns (chunks processed, modeled KV bytes written, dispatches)."""
         nbytes = 0
         tok_bytes = self._page_bytes // self.page_size
-        finished: List[int] = []
+        C = self.prefill_chunk
+        plan: List[Tuple[int, Request, int, int]] = []
         for slot in sorted(self._prefilling):
             req, off = self._prefilling[slot]
-            C = self.prefill_chunk
             take = min(C, req.prompt_len - off)
             end = off + take
             self.pages.ensure(slot, end)
             nbytes += take * tok_bytes
-            width = self._page_bucket(self.pages.n_pages_of(slot))
-            table = self.pages.table_array(self.capacity, width,
-                                           only=[slot])[slot: slot + 1]
-            toks = np.zeros((1, C), np.int32)
-            toks[0, :take] = req.prompt[off:end]
-            nxt, self.blocks = self._chunk_fn(C, width)(
+            plan.append((slot, req, off, end))
+        groups: Dict[int, List[Tuple[int, Request, int, int]]] = {}
+        for item in plan:
+            width = self._page_bucket(self.pages.n_pages_of(item[0]))
+            groups.setdefault(width, []).append(item)
+        n_chunks = 0
+        n_dispatch = 0
+        finished: List[int] = []
+        for width, group in sorted(groups.items()):
+            n = len(group)
+            nb = self._n_bucket(n)
+            toks = np.zeros((nb, C), np.int32)
+            offs = np.zeros(nb, np.int32)
+            ends = np.zeros(nb, np.int32)  # 0 marks an inert pad row
+            tbl = np.full((nb, width), -1, np.int32)
+            full = self.pages.table_array(self.capacity, width,
+                                          only=[s for s, *_ in group])
+            for i, (slot, req, off, end) in enumerate(group):
+                toks[i, : end - off] = req.prompt[off:end]
+                offs[i], ends[i] = off, end
+                tbl[i] = full[slot]
+            nxt, self.blocks = self._chunk_fn(C, width, nb)(
                 self.params, self.blocks, jnp.asarray(toks),
-                jnp.asarray([off], jnp.int32), jnp.asarray([end], jnp.int32),
-                jnp.asarray(table))
-            n_chunks += 1
-            if end >= req.prompt_len:
-                finished.append(slot)
-                tok = int(np.asarray(jax.block_until_ready(nxt))[0])
-                self._start_decoding(req, tok, self._now())
-            else:
-                self._prefilling[slot] = (req, end)
+                jnp.asarray(offs), jnp.asarray(ends), jnp.asarray(tbl))
+            n_chunks += n
+            n_dispatch += 1
+            nxt_np: Optional[np.ndarray] = None
+            for i, (slot, req, off, end) in enumerate(group):
+                if end >= req.prompt_len:
+                    if nxt_np is None:
+                        nxt_np = np.asarray(jax.block_until_ready(nxt))
+                    finished.append(slot)
+                    self._start_decoding(req, int(nxt_np[i]), self._now())
+                else:
+                    self._prefilling[slot] = (req, end)
         for slot in finished:
             del self._prefilling[slot]
-        return n_chunks, nbytes
+        return n_chunks, nbytes, n_dispatch
 
     # --- suspend / resume (cluster scale-to-zero) -------------------------
     def suspend(self) -> None:
@@ -544,6 +662,103 @@ class ServeEngine:
             self.scheduler.submit(r)
             self.metrics.requests.append(r)
 
+    def _paged_batch_inputs(self, active: List[int], n_new: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Grow each active slot's block table to cover its span of
+        `n_new[slot]` pending writes and build the width-bucketed
+        (table, lengths) dispatch inputs — shared by the plain decode
+        (n_new == 1) and speculative verify (n_new == 1 + drafts) paths."""
+        pos = self.scheduler.pool.pos
+        for slot in active:
+            self.pages.ensure(slot, int(pos[slot]) + int(n_new[slot]))
+        width = self._page_bucket(
+            max(self.pages.n_pages_of(s) for s in active))
+        table = self.pages.table_array(self.capacity, width, only=active)
+        lengths = np.zeros(self.capacity, np.int32)
+        for slot in active:
+            lengths[slot] = pos[slot] + n_new[slot]
+        return table, lengths
+
+    def _spec_decode(self, active: List[int], verify_fn
+                     ) -> Tuple[int, float, int, int, int]:
+        """One speculative solver phase: propose up to `spec_k` drafts per
+        active slot, score all k+1 positions in ONE (B, Q) verify dispatch,
+        emit the longest matching draft prefix plus the model's own token at
+        the first mismatch (bit-identical to sequential greedy), and roll
+        back per-slot state for the rejected tail (lengths stay host-side;
+        pages allocated solely for rejected drafts are trimmed back to the
+        free list).  Returns (tokens emitted, step seconds, drafted,
+        accepted, drafter device dispatches)."""
+        k = self.spec_k
+        Q = k + 1
+        sched = self.scheduler
+        pos_np = sched.pool.pos
+        # drafting is part of the solver phase: the step timing that feeds
+        # decode_s and the per-worker policy feedback starts HERE, so a
+        # slow drafter (e.g. the draft model's own forwards) is visible
+        t0 = time.perf_counter()
+        contexts = []
+        for slot in active:
+            r = self._by_slot[slot]
+            contexts.append(np.concatenate(
+                [np.asarray(r.prompt, np.int64),
+                 np.asarray(r.generated, np.int64)]))
+        proposals = self.drafter.propose(contexts, k)
+        toks = np.zeros((self.capacity, Q), np.int32)
+        n_new = np.zeros(self.capacity, np.int32)
+        drafts: Dict[int, np.ndarray] = {}
+        for i, slot in enumerate(active):
+            r = self._by_slot[slot]
+            # draft budget: never past the KV capacity or the request's
+            # remaining token budget (wasted verification positions)
+            budget = min(k, self.cache_len - 1 - int(pos_np[slot]),
+                         r.max_new_tokens - r.n_generated - 1)
+            d = np.asarray(proposals[i], np.int64)[: max(budget, 0)]
+            drafts[slot] = d
+            toks[slot, 0] = self.next_tok[slot, 0]
+            if len(d):
+                toks[slot, 1: 1 + len(d)] = d
+            n_new[slot] = 1 + len(d)
+
+        if self.kv_layout == "paged":
+            table, lengths = self._paged_batch_inputs(active, n_new)
+            vtok, self.blocks = verify_fn(
+                self.params, self.blocks, jnp.asarray(toks),
+                jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
+                jnp.asarray(lengths))
+        else:
+            vtok, self.blocks, self.k_pos = verify_fn(
+                self.params, self.blocks, self.k_pos, jnp.asarray(toks),
+                jnp.asarray(pos_np, jnp.int32), jnp.asarray(n_new))
+        vtok = np.asarray(jax.block_until_ready(vtok))
+        t_step = time.perf_counter() - t0
+        sched.end_iteration()
+
+        now = self._now()
+        emitted = drafted = accepted = 0
+        for slot in active:
+            req = self._by_slot[slot]
+            d = drafts[slot]
+            m = greedy_accept(d, vtok[slot])
+            drafted += len(d)
+            accepted += m
+            for j in range(m + 1):
+                tok = int(vtok[slot, j])
+                req.generated.append(tok)
+                self.next_tok[slot, 0] = tok
+                sched.pool.pos[slot] += 1
+                emitted += 1
+                if req.done():
+                    break
+            if req.done():
+                del self._by_slot[slot]
+                self._release(req, now)
+            elif self.pages is not None:
+                # rollback: pages allocated solely for rejected drafts
+                self.pages.trim(slot, int(sched.pool.pos[slot]))
+        return (emitted, t_step, drafted, accepted,
+                getattr(self.drafter, "dispatches_per_propose", 0))
+
     def _finish_at_capacity(self) -> None:
         """A slot whose next write position is past the cache can't store
         another KV row: finish its request instead of silently overwriting
@@ -573,55 +788,65 @@ class ServeEngine:
         admitted = sched.admit(now)
         admission_bytes = self._do_prefill(admitted) if admitted else 0
         n_chunks = 0
+        n_chunk_dispatch = 0
         if self._prefilling:
-            n_chunks, chunk_bytes = self._advance_prefills()
+            n_chunks, chunk_bytes, n_chunk_dispatch = self._advance_prefills()
             admission_bytes += chunk_bytes
         self._finish_at_capacity()
 
-        # ---- solver phase: one pool-wide decode step ----
+        # ---- solver phase: one pool-wide decode (or spec-verify) step ----
         emitted = 0
         t_step = 0.0
+        drafted = accepted = draft_disp = 0
         active = sorted(self._by_slot)
         if active:
             sched.begin_iteration()
-            _, _, decode_fn = self._k_cache[self._k_mesh(self.k)]
-            pos_np = sched.pool.pos
-            t0 = time.perf_counter()
-            if self.kv_layout == "paged":
-                for slot in active:  # new page at a page boundary
-                    self.pages.ensure(slot, int(pos_np[slot]) + 1)
-                width = self._page_bucket(
-                    max(self.pages.n_pages_of(s) for s in active))
-                table = self.pages.table_array(self.capacity, width,
-                                               only=active)
-                lengths = np.zeros(self.capacity, np.int32)
-                for slot in active:
-                    lengths[slot] = pos_np[slot] + 1
-                nxt, self.blocks = decode_fn(
-                    self.params, self.blocks, jnp.asarray(self.next_tok),
-                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                    jnp.asarray(lengths))
+            _, _, decode_fn, verify_fn = self._k_cache[self._k_mesh(self.k)]
+            if self.drafter is not None:
+                (emitted, t_step, drafted, accepted,
+                 draft_disp) = self._spec_decode(active, verify_fn)
             else:
-                nxt, self.blocks, self.k_pos = decode_fn(
-                    self.params, self.blocks, self.k_pos,
-                    jnp.asarray(self.next_tok),
-                    jnp.asarray(pos_np, jnp.int32))
-            nxt = np.asarray(jax.block_until_ready(nxt))
-            t_step = time.perf_counter() - t0
-            sched.end_iteration()
+                pos_np = sched.pool.pos
+                t0 = time.perf_counter()
+                if self.kv_layout == "paged":
+                    table, lengths = self._paged_batch_inputs(
+                        active, np.ones(self.capacity, np.int32))
+                    nxt, self.blocks = decode_fn(
+                        self.params, self.blocks, jnp.asarray(self.next_tok),
+                        jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
+                        jnp.asarray(lengths))
+                else:
+                    nxt, self.blocks, self.k_pos = decode_fn(
+                        self.params, self.blocks, self.k_pos,
+                        jnp.asarray(self.next_tok),
+                        jnp.asarray(pos_np, jnp.int32))
+                nxt = np.asarray(jax.block_until_ready(nxt))
+                t_step = time.perf_counter() - t0
+                sched.end_iteration()
 
-            now = self._now()
-            for slot in active:
-                req = self._by_slot[slot]
-                req.generated.append(int(nxt[slot]))
-                self.next_tok[slot, 0] = int(nxt[slot])
-                sched.pool.pos[slot] += 1
-                emitted += 1
-                if req.done():
-                    del self._by_slot[slot]
-                    self._release(req, now)
+                now = self._now()
+                for slot in active:
+                    req = self._by_slot[slot]
+                    req.generated.append(int(nxt[slot]))
+                    self.next_tok[slot, 0] = int(nxt[slot])
+                    sched.pool.pos[slot] += 1
+                    emitted += 1
+                    if req.done():
+                        del self._by_slot[slot]
+                        self._release(req, now)
         else:
             sched.sim_time += 1.0  # idle ticks still advance schedule time
+
+        if self.debug_checks:
+            # page-leak guard: every live slot must hold EXACTLY the pages
+            # its live tokens need — a page kept for a rejected draft or
+            # leaked by an at-capacity finish fails the tick it happens
+            sched.pool.check_invariants()
+            if self.pages is not None:
+                live = {s: int(sched.pool.pos[s]) for s in self._by_slot}
+                live.update({s: off for s, (_, off)
+                             in self._prefilling.items()})
+                self.pages.check(live)
 
         # modeled per-worker timing attribution feeds the same policy
         # feedback loop as training (load-proportional split of the step)
@@ -643,8 +868,11 @@ class ServeEngine:
                          tokens_emitted=emitted,
                          admission_bytes=admission_bytes,
                          prefill_chunks=n_chunks,
+                         prefill_dispatches=n_chunk_dispatch,
                          page_occupancy=(self.pages.occupancy()
-                                         if self.pages else 0.0))
+                                         if self.pages else 0.0),
+                         spec_drafted=drafted, spec_accepted=accepted,
+                         draft_dispatches=draft_disp)
         self.metrics.ticks.append(rec)
         self._tick += 1
         return rec

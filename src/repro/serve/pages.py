@@ -22,6 +22,16 @@ import numpy as np
 NULL_PAGE = 0
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (bucketing helper: table widths, batch
+    sizes, and draft-context lengths all bucket to powers of two so jit
+    retrace counts stay logarithmic)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class PageError(RuntimeError):
     pass
 
@@ -84,6 +94,23 @@ class PageAllocator:
             del self._owner[pg]
         self._free.extend(reversed(pages))  # lowest ids handed out again first
         return pages
+
+    def trim(self, slot: int, n_tokens: int) -> List[int]:
+        """Shrink slot's table to cover exactly n_tokens, freeing the tail.
+
+        The speculative-decode rollback: pages allocated for draft tokens
+        that verification then rejected go straight back to the free list.
+        Returns the freed pages (possibly empty)."""
+        if slot not in self._tables:
+            raise PageError(f"trim of slot {slot} with no block table")
+        table = self._tables[slot]
+        keep = self.pages_for(n_tokens)
+        freed = table[keep:]
+        del table[keep:]
+        for pg in freed:
+            del self._owner[pg]
+        self._free.extend(reversed(freed))
+        return freed
 
     # --- queries ----------------------------------------------------------
     @property
@@ -154,6 +181,28 @@ class PageAllocator:
         return src
 
     # --- invariants -------------------------------------------------------
+    def check(self, live: Optional[Dict[int, int]] = None) -> None:
+        """Full leak guard: structural invariants plus — when `live` maps
+        each slot to its live token count — EXACT coverage: every live slot
+        holds exactly `pages_for(tokens)` pages and no other slot holds any.
+        The engine calls this each tick under `debug_checks=True`, so a page
+        kept for a rejected draft token or leaked by an at-capacity finish
+        fails the tick it happens."""
+        self.check_invariants()
+        if live is None:
+            return
+        if set(self._tables) != set(live):
+            raise PageError(
+                f"live slots {sorted(live)} != tables {sorted(self._tables)}")
+        for slot, n_tokens in live.items():
+            want = self.pages_for(n_tokens)
+            got = len(self._tables[slot])
+            if got != want:
+                raise PageError(
+                    f"slot {slot} holds {got} pages for {n_tokens} live "
+                    f"tokens (want exactly {want}) — page leak or rollback "
+                    f"miss")
+
     def check_invariants(self) -> None:
         """null page never allocated; free/owned disjoint and exhaustive;
         tables and owner map agree; no page in two tables."""

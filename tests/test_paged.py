@@ -127,23 +127,26 @@ def test_table_array_only_and_width_checks():
 # ---------------------------------------------------------------------------
 
 PAGED_CASES = [
-    # (B, KV, G, hd, ps, P, window)
-    (3, 2, 4, 32, 8, 4, 0),
-    (2, 1, 8, 64, 16, 3, 0),
-    (4, 2, 2, 32, 8, 8, 0),
-    (3, 2, 4, 32, 8, 6, 16),  # sliding window
+    # (B, KV, G, hd, ps, P, window, q_span)
+    (3, 2, 4, 32, 8, 4, 0, 1),
+    (2, 1, 8, 64, 16, 3, 0, 1),
+    (4, 2, 2, 32, 8, 8, 0, 1),
+    (3, 2, 4, 32, 8, 6, 16, 1),  # sliding window
+    (3, 2, 4, 32, 8, 4, 0, 3),  # Q>1: speculative verify spans
+    (2, 1, 8, 64, 16, 3, 0, 5),
+    (3, 2, 2, 32, 8, 6, 16, 4),  # Q>1 + sliding window
 ]
 
 
 @pytest.mark.parametrize("case", PAGED_CASES)
 def test_paged_attention_kernel_parity(case):
-    B, KV, G, hd, ps, P, window = case
+    B, KV, G, hd, ps, P, window, Q = case
     rng = np.random.default_rng(1)
     N = B * P + 1
-    q = jnp.asarray(rng.standard_normal((B, KV, G, hd)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, KV, Q * G, hd)), jnp.float32)
     kp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
     vp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
-    lengths = rng.integers(0, P * ps + 1, size=B)
+    lengths = rng.integers(Q, P * ps + 1, size=B)
     lengths[0] = 0  # inactive row must return zeros
     perm = rng.permutation(np.arange(1, N))
     table = np.full((B, P), -1, np.int32)
@@ -154,13 +157,41 @@ def test_paged_attention_kernel_parity(case):
         used += n
     out = paged_attention(q, kp, vp, jnp.asarray(table),
                           jnp.asarray(lengths, jnp.int32), window=window,
-                          interpret=True)
+                          q_span=Q, interpret=True)
     want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(table),
                                    jnp.asarray(lengths, jnp.int32),
-                                   window=window)
+                                   window=window, q_span=Q)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
     assert np.all(np.asarray(out)[0] == 0.0)
+
+
+def test_paged_attention_q_span_matches_sequential_refs():
+    """A Q-span oracle call must equal Q independent single-query calls at
+    the span's successive positions (the verification-correctness core)."""
+    rng = np.random.default_rng(3)
+    B, KV, G, hd, ps, P, Q = 2, 2, 3, 16, 4, 6, 3
+    N = B * P + 1
+    q = jnp.asarray(rng.standard_normal((B, KV, Q * G, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, ps, KV, hd)), jnp.float32)
+    lengths = np.array([Q + 5, P * ps], np.int32)
+    table = np.full((B, P), -1, np.int32)
+    perm = rng.permutation(np.arange(1, N))
+    used = 0
+    for b in range(B):
+        n = -(-int(lengths[b]) // ps)
+        table[b, :n] = perm[used: used + n]
+        used += n
+    span = ref.paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                                   jnp.asarray(lengths), q_span=Q)
+    for j in range(Q):
+        qj = q.reshape(B, KV, Q, G, hd)[:, :, j]
+        lj = jnp.asarray(lengths - (Q - 1 - j), jnp.int32)
+        one = ref.paged_attention_ref(qj, kp, vp, jnp.asarray(table), lj)
+        np.testing.assert_allclose(
+            np.asarray(span.reshape(B, KV, Q, G, hd)[:, :, j]),
+            np.asarray(one), rtol=2e-5, atol=2e-5)
 
 
 def test_paged_engine_pallas_impl_matches_xla(cfg):
