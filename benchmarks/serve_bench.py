@@ -18,8 +18,14 @@ Three modes:
   tokens per tick, tokens per decode dispatch (the claim: speculation
   raises useful work per dispatch >= 1.3x at equal output), per-tick decode
   p50, and tokens/s.
+- ``--share``: prefix-sharing on/off A/B on a few-shot shared-header
+  workload (every prompt repeats the same long header + a unique
+  question).  Both arms run the paged engine on the SAME trace and must
+  emit bit-identical token streams; the record carries physical pages held
+  (peak and mean — the claim: >= 2x fewer with sharing on), admission bytes
+  written, copy-on-write breaks, and tokens/s.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--ab | --spec]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--ab | --spec | --share]
         [--fast] [--dry-run] [--out serve_bench.json]
 """
 from __future__ import annotations
@@ -260,11 +266,90 @@ def run_spec(arch: str = "smollm-360m", *, fast: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Prefix-sharing on/off A/B on a few-shot shared-header workload
+# ---------------------------------------------------------------------------
+
+
+def _share_workload(cfg, *, fast: bool, seed: int):
+    """Few-shot mix: every prompt carries the same `header`-token few-shot
+    preamble plus a short unique question; a couple of requests repeat an
+    earlier prompt verbatim (the partial-tail + copy-on-write path)."""
+    if fast:
+        n, header, rate, max_new = 6, 32, 60.0, (4, 6)
+    else:
+        n, header, rate, max_new = 16, 64, 40.0, (6, 10)
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, size=header)
+    reqs = synthetic_requests(
+        n, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(n, rate, rng=rng), prompt_len=(6, 12),
+        max_new_tokens=max_new, shared_prefix=head, rng=rng)
+    # verbatim repeats of the first prompt: whole-prefix + COW exercise
+    for i, r in enumerate(reqs[-2:]):
+        r.prompt = reqs[0].prompt.copy()
+    return reqs
+
+
+def run_share(arch: str = "smollm-360m", *, fast: bool = False,
+              dry_run: bool = False, seed: int = 0) -> dict:
+    cfg = smoke_variant(get_config(arch))
+    kw = dict(capacity=4 if dry_run else 8, cache_len=128, prefill_bucket=16,
+              n_workers=1, kv_layout="paged", chunked_prefill=False,
+              debug_checks=True, seed=seed)
+    arms = {}
+    streams = {}
+    for mode in ("off", "on"):
+        engine = ServeEngine(cfg, prefix_share=(mode == "on"), **kw)
+        m = engine.run(_share_workload(cfg, fast=fast or dry_run, seed=seed),
+                       max_ticks=40 if dry_run else 100_000)
+        s = m.summarize()
+        pages = np.array([t.page_occupancy for t in m.ticks]) \
+            * (engine.pages.n_pages - 1)
+        streams[mode] = {r.rid: tuple(r.generated) for r in m.requests}
+        arms[mode] = {
+            "tokens_generated": s["tokens_generated"],
+            "requests_finished": s["requests_finished"],
+            "pages_peak": int(pages.max()) if len(pages) else 0,
+            "pages_mean": float(pages.mean()) if len(pages) else 0.0,
+            "admission_bytes_total": s["admission_bytes_total"],
+            "shared_page_hits": s["shared_page_hits_total"],
+            "cow_breaks": s["cow_breaks_total"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "tokens_per_s": s["tokens_per_s"],
+            "wall_s": s["wall_s"],
+        }
+    off, on = arms["off"], arms["on"]
+    rec = {
+        "bench": "serve_bench_share",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "off": off,
+        "on": on,
+        "streams_equal": streams["off"] == streams["on"],
+        "pages_peak_ratio": off["pages_peak"] / max(on["pages_peak"], 1),
+        "pages_mean_ratio": (off["pages_mean"] / on["pages_mean"]
+                             if on["pages_mean"] else None),
+        "admission_bytes_ratio": (off["admission_bytes_total"]
+                                  / max(on["admission_bytes_total"], 1)),
+    }
+    if not dry_run:
+        assert rec["streams_equal"], \
+            "prefix sharing changed the token streams"
+        assert rec["pages_peak_ratio"] >= 2.0, \
+            f"sharing saved only {rec['pages_peak_ratio']:.2f}x peak pages " \
+            f"on the few-shot workload"
+        assert on["cow_breaks"] > 0, "workload never exercised copy-on-write"
+    return rec
+
+
 def main(fast: bool = False) -> None:
     """Entry point for benchmarks.run registration."""
     print(json.dumps(run(requests=8 if fast else 24)))
     print(json.dumps(run_ab(fast=fast)))
     print(json.dumps(run_spec(fast=fast)))
+    print(json.dumps(run_share(fast=fast)))
 
 
 def _cli() -> None:
@@ -280,6 +365,9 @@ def _cli() -> None:
                     help="paged-vs-flat A/B on the mixed workload")
     ap.add_argument("--spec", action="store_true",
                     help="speculation on/off A/B on the repetitive mix")
+    ap.add_argument("--share", action="store_true",
+                    help="prefix-sharing on/off A/B on the few-shot "
+                         "shared-header workload")
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
@@ -290,6 +378,9 @@ def _cli() -> None:
     if args.ab:
         rec = run_ab(args.arch, fast=args.fast, dry_run=args.dry_run,
                      seed=args.seed)
+    elif args.share:
+        rec = run_share(args.arch, fast=args.fast, dry_run=args.dry_run,
+                        seed=args.seed)
     elif args.spec:
         rec = run_spec(args.arch, fast=args.fast, dry_run=args.dry_run,
                        spec_k=args.spec_k, seed=args.seed)

@@ -15,11 +15,17 @@ python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
 echo "== paged-attention kernel parity (Pallas interpret vs jnp oracle) =="
 python -m repro.kernels.paged_attention --selftest
 
+echo "== KV memory manager invariants (refcount/COW/park fuzz) =="
+python -m repro.serve.memory --selftest
+
 echo "== paged-vs-flat serve A/B (dry run) =="
 python benchmarks/serve_bench.py --ab --dry-run
 
 echo "== speculative-decode on/off A/B (dry run) =="
 python benchmarks/serve_bench.py --spec --dry-run
+
+echo "== prefix-sharing on/off A/B (dry run) =="
+python benchmarks/serve_bench.py --share --dry-run
 
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast

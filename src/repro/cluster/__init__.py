@@ -12,13 +12,15 @@ projection, `UniTaskEngine` + callable `ElasticScalingPolicy`, and
 - `pool`         — simulated heterogeneous device pool (leases, minimal-churn
                    reassignment, per-node speed = the engines' node-pst model)
 - `allocator`    — weighted max-min fair shares with priority boost and
-                   preemption; pure function of the demand vector
+                   preemption; pure function of the demand vector (plus an
+                   optional `UsageLedger` lookahead: time-decayed usage
+                   credit so bursty jobs repay over subsequent ticks)
 - `jobs`         — `TrainJob` / `ServeJob` wrappers + `JobSpec`
 - `trace`        — JSON-able arrival/departure/burst event traces
 - `orchestrator` — the discrete-event tick loop + cluster metrics
                    (makespan, utilization, Jain fairness, preemptions)
 """
-from .allocator import FairShareAllocator, JobDemand
+from .allocator import FairShareAllocator, JobDemand, UsageLedger
 from .jobs import (ClusterJob, JobSpec, JobState, LMTrainJob, ServeJob,
                    TrainJob, cocoa_train_job)
 from .orchestrator import ClusterOrchestrator, ClusterReport, TickStats
@@ -29,5 +31,5 @@ __all__ = [
     "ClusterJob", "ClusterOrchestrator", "ClusterReport", "ClusterTrace",
     "DevicePool", "FairShareAllocator", "JobDemand", "JobSpec", "JobState",
     "LMTrainJob", "ServeJob", "TickStats", "TraceEvent", "TrainJob",
-    "arrive", "burst", "cocoa_train_job", "depart",
+    "UsageLedger", "arrive", "burst", "cocoa_train_job", "depart",
 ]

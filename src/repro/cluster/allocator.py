@@ -18,11 +18,22 @@ invariants (property-tested in tests/test_cluster.py):
 Preemption itself is an *orchestrator* event (an allocation that shrinks a
 job which still has demand); the allocator is a pure function of the
 current demand vector, which is what makes the decisions replayable.
+
+**Allocator lookahead** (`UsageLedger`): the base allocator is memoryless
+per tick, so a bursty job that monopolized the pool while others were idle
+pays nothing back.  The ledger keeps a time-decayed integral of each job's
+leased nodes and of its weighted fair entitlement; `credit()` turns the gap
+into a bounded multiplier on the effective weight — jobs that recently ran
+over their share repay credit over subsequent ticks, jobs that waited are
+boosted, and the exponential decay forgets ancient history so long-run
+shares still converge to the configured weights.  The allocator stays a
+pure function: the ledger's snapshot is just one more replayable input.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+import math
+from typing import Dict, List, Optional, Sequence
 
 from ..core.fairshare import integerize_shares, weighted_max_min
 
@@ -37,6 +48,69 @@ class JobDemand:
     priority: int = 0  # higher preempts lower via the effective weight
 
 
+class UsageLedger:
+    """Time-decayed per-job usage accounting (allocator lookahead).
+
+    Both integrals decay with half-life `half_life` (in simulated seconds):
+
+      usage[j]    <- usage[j] * 2^(-dt/hl) + alloc[j] * dt
+      fairness[j] <- fairness[j] * 2^(-dt/hl) + fair_share[j] * dt
+
+    where fair_share[j] is the weight-proportional slice of the nodes the
+    demanding jobs consumed that tick.  `credit(name)` returns
+    clamp((fairness+eps)/(usage+eps), 1/credit_cap, credit_cap): a job that
+    recently over-consumed gets < 1 (repays its burst), one that waited
+    gets > 1, and a job with no history gets exactly 1.
+    """
+
+    def __init__(self, half_life: float = 8.0, credit_cap: float = 4.0,
+                 eps: float = 1e-3):
+        if half_life <= 0:
+            raise ValueError("half_life must be positive")
+        if credit_cap <= 1.0:
+            raise ValueError("credit_cap must be > 1")
+        self.half_life = float(half_life)
+        self.credit_cap = float(credit_cap)
+        self.eps = float(eps)
+        self._usage: Dict[str, float] = {}
+        self._fair: Dict[str, float] = {}
+
+    def update(self, alloc: Dict[str, int],
+               demands: Sequence[JobDemand], dt: float) -> None:
+        """Fold one tick's allocation into the decayed integrals.
+
+        The fair entitlement is the DEMAND-CAPPED weighted max-min split of
+        what the demanding set actually consumed: capacity a satisfied
+        low-demand peer cannot use flows to the others as entitlement, not
+        debt — scavenging otherwise-idle nodes must never be penalized."""
+        decay = math.pow(2.0, -dt / self.half_life)
+        for k in list(self._usage):
+            self._usage[k] *= decay
+            self._fair[k] *= decay
+        demanding = [d for d in demands if d.demand > 0]
+        consumed = sum(alloc.get(d.name, 0) for d in demanding)
+        fairs = (weighted_max_min(consumed, [d.demand for d in demanding],
+                                  [max(d.weight, 1e-12) for d in demanding])
+                 if demanding and consumed else [0.0] * len(demanding))
+        for d, fair in zip(demanding, fairs):
+            self._usage[d.name] = self._usage.get(d.name, 0.0) \
+                + alloc.get(d.name, 0) * dt
+            self._fair[d.name] = self._fair.get(d.name, 0.0) + fair * dt
+
+    def credit(self, name: str) -> float:
+        u = self._usage.get(name, 0.0)
+        f = self._fair.get(name, 0.0)
+        c = (f + self.eps) / (u + self.eps)
+        return min(max(c, 1.0 / self.credit_cap), self.credit_cap)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {k: self.credit(k) for k in self._usage}
+
+    def forget(self, name: str) -> None:
+        self._usage.pop(name, None)
+        self._fair.pop(name, None)
+
+
 class FairShareAllocator:
     """Pure weighted max-min allocator over a single node pool."""
 
@@ -45,12 +119,18 @@ class FairShareAllocator:
             raise ValueError("priority_boost must be > 1")
         self.priority_boost = priority_boost
 
-    def effective_weight(self, d: JobDemand) -> float:
-        return d.weight * self.priority_boost ** d.priority
+    def effective_weight(self, d: JobDemand,
+                         credit: Optional[Dict[str, float]] = None) -> float:
+        c = credit.get(d.name, 1.0) if credit else 1.0
+        return d.weight * self.priority_boost ** d.priority * c
 
-    def allocate(self, pool_size: int,
-                 demands: Sequence[JobDemand]) -> Dict[str, int]:
-        """Integer node allocation per job name (jobs with 0 demand get 0)."""
+    def allocate(self, pool_size: int, demands: Sequence[JobDemand],
+                 credit: Optional[Dict[str, float]] = None) -> Dict[str, int]:
+        """Integer node allocation per job name (jobs with 0 demand get 0).
+
+        credit: optional `UsageLedger.snapshot()` multipliers — bounded
+        usage-history tilts that keep every invariant below intact (they
+        only rescale positive weights)."""
         if pool_size < 0:
             raise ValueError("pool_size must be >= 0")
         for d in demands:
@@ -59,7 +139,7 @@ class FairShareAllocator:
             if d.demand < 0:
                 raise ValueError(f"job {d.name!r}: demand must be >= 0")
         caps = [min(d.demand, pool_size) for d in demands]
-        eff = [self.effective_weight(d) for d in demands]
+        eff = [self.effective_weight(d, credit) for d in demands]
         shares = weighted_max_min(pool_size, caps, [max(w, 1e-12) for w in eff])
         alloc = integerize_shares(shares, caps, pool_size, prefer=eff)
 

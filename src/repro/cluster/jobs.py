@@ -319,13 +319,23 @@ class LMTrainJob(ClusterJob):
 
 
 class ServeJob(ClusterJob):
-    """Serving job on the simulated clock; demand follows the backlog."""
+    """Serving job on the simulated clock; demand follows the backlog.
+
+    With ``kv_layout="paged"`` a lease SHRINK parks the now-unservable
+    decode slots (pages to host memory, O(moved pages), nothing
+    re-prefilled) instead of letting them contend for the smaller lease;
+    the bytes moved are charged to `kv_moved_bytes` and surface in the
+    cluster report — the serving half of Chicle's cheap-preemption claim.
+    """
 
     def __init__(self, spec: JobSpec, cfg, *, capacity: int = 8,
                  cache_len: int = 48, prefill_bucket: int = 8,
                  slots_per_node: int = 2, ticks_per_dt: float = 2.0,
                  max_admit_per_tick: int = 4,
                  tenant_weights: Optional[Dict[str, float]] = None,
+                 kv_layout: str = "flat", page_size: int = 8,
+                 prefix_share: Optional[bool] = None,
+                 evict: Optional[bool] = None,
                  seed: int = 0):
         super().__init__(spec)
         self._sim_now = 0.0
@@ -336,10 +346,22 @@ class ServeJob(ClusterJob):
             prefill_bucket=prefill_bucket, n_workers=1,
             max_admit_per_tick=max_admit_per_tick,
             tenant_weights=tenant_weights, seed=seed,
+            kv_layout=kv_layout, page_size=page_size,
+            prefix_share=prefix_share, evict=evict,
             clock=lambda: self._sim_now)
         self._rid = 0
         self.expected_requests = 0
         self.no_more_arrivals = False  # set by the orchestrator from the trace
+
+    @property
+    def kv_moved_bytes(self) -> int:
+        """All KV bytes moved host<->device by preemptions: lease-shrink
+        parks, priority-admission parks, and the restores that bring both
+        back — the engine's memory manager is the authoritative ledger."""
+        if self.engine.mem is None:
+            return 0
+        s = self.engine.mem.stats()
+        return int(s["park_bytes"] + s["restore_bytes"])
 
     # --- workload ---------------------------------------------------------
     def make_requests(self, at: float, n: int, *, rate: float = 0.0,
@@ -378,6 +400,7 @@ class ServeJob(ClusterJob):
 
     def on_allocation(self, nodes: Sequence[int], psts: Sequence[float],
                       now: float) -> None:
+        prev = len(self.nodes)
         super().on_allocation(nodes, psts, now)
         if not self.active:
             return
@@ -385,6 +408,18 @@ class ServeJob(ClusterJob):
             self.engine.suspend()  # scale-to-zero: KV + queues kept intact
         else:
             self.engine.resume()
+            if self.engine.evict:
+                # cap concurrent decodes at what the lease can serve; on a
+                # shrink, park the overhang (pages to host, charged below)
+                # — parked slots stay parked until the lease grows again.
+                # Mid-prefill slots count against the lease but cannot be
+                # parked themselves (only decodes park), so park_excess
+                # evicts that many more decoding slots instead.
+                allowed = max(1, len(nodes) * self.slots_per_node)
+                self.engine.scheduler.active_cap = allowed
+                over = self.engine.n_active_slots - allowed
+                if len(nodes) < prev and over > 0:
+                    self.engine.park_excess(over)  # bytes land in mem.stats
             if self.engine.k != len(nodes):
                 self.engine.resize(len(nodes))
 
@@ -429,5 +464,6 @@ class ServeJob(ClusterJob):
         if m.wall_s == 0.0:  # mid-run snapshot: derive, don't mutate
             m = dataclasses.replace(m, wall_s=self.service_time())
         s.update({"serve": m.summarize(),
-                  "expected_requests": self.expected_requests})
+                  "expected_requests": self.expected_requests,
+                  "kv_moved_bytes": self.kv_moved_bytes})
         return s

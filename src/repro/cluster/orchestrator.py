@@ -23,7 +23,7 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.fairshare import jain_index
-from .allocator import FairShareAllocator, JobDemand
+from .allocator import FairShareAllocator, JobDemand, UsageLedger
 from .jobs import ClusterJob, JobState, ServeJob
 from .pool import DevicePool
 from .trace import ClusterTrace
@@ -47,6 +47,10 @@ class ClusterReport:
     ticks: int
     jobs: Dict[str, Dict[str, Any]]
     timeline: List[TickStats]
+    # KV bytes moved host<->device by serve-job preemptions (lease-shrink
+    # AND priority-admission parks, plus their restores) — the cluster-level
+    # cost of page-granular eviction, O(moved pages)
+    kv_moved_bytes: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)  # deep-converts TickStats too
@@ -58,6 +62,7 @@ class ClusterOrchestrator:
     def __init__(self, pool: DevicePool, jobs: Sequence[ClusterJob],
                  trace: ClusterTrace, *,
                  allocator: Optional[FairShareAllocator] = None,
+                 usage_half_life: Optional[float] = None,
                  dt: float = 1.0, max_ticks: int = 10_000):
         self.pool = pool
         self.trace = trace
@@ -70,6 +75,10 @@ class ClusterOrchestrator:
             if ev.job not in self.jobs:
                 raise ValueError(f"trace references unknown job {ev.job!r}")
         self.allocator = allocator or FairShareAllocator()
+        # allocator lookahead: decayed usage accounting so bursty jobs repay
+        # credit over subsequent ticks (None = memoryless, the default)
+        self.ledger = (UsageLedger(usage_half_life)
+                       if usage_half_life is not None else None)
         self.dt = float(dt)
         self.max_ticks = max_ticks
         self.now = 0.0
@@ -110,10 +119,13 @@ class ClusterOrchestrator:
         ordered = sorted(
             active, key=lambda j: (-j.spec.priority, -j.spec.weight,
                                    j.spec.name))
+        jds = [JobDemand(j.spec.name, demands[j.spec.name], j.spec.weight,
+                         j.spec.priority) for j in ordered]
         alloc = self.allocator.allocate(
-            self.pool.n_nodes,
-            [JobDemand(j.spec.name, demands[j.spec.name], j.spec.weight,
-                       j.spec.priority) for j in ordered])
+            self.pool.n_nodes, jds,
+            credit=self.ledger.snapshot() if self.ledger else None)
+        if self.ledger is not None:
+            self.ledger.update(alloc, jds, self.dt)
         leases = self.pool.reassign(
             {j.spec.name: alloc.get(j.spec.name, 0) for j in ordered})
 
@@ -174,4 +186,6 @@ class ClusterOrchestrator:
             ticks=len(self.timeline),
             jobs={n: j.summary() for n, j in self.jobs.items()},
             timeline=self.timeline,
+            kv_moved_bytes=sum(getattr(j, "kv_moved_bytes", 0)
+                               for j in self.jobs.values()),
         )

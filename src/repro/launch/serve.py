@@ -69,6 +69,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           workers: int = 1, scale_events: Optional[str] = None,
           straggler_policy: bool = False, kv_layout: str = "flat",
           page_size: int = 8, spec: str = "off", spec_k: int = 4,
+          prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
           seed: int = 0) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary."""
     cfg = get_config(arch)
@@ -93,6 +94,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
                          prefill_bucket=prefill_bucket, n_workers=workers,
                          policies=policies, kv_layout=kv_layout,
                          page_size=page_size, spec=spec, spec_k=spec_k,
+                         prefix_share=prefix_share, evict=evict,
                          seed=seed)
     metrics = engine.run(reqs)
     out = metrics.summarize()
@@ -135,11 +137,21 @@ def main() -> None:
                          "draft_params for real draft-model speculation")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed/verified per tick")
+    ap.add_argument("--prefix-share", default=None, choices=["on", "off"],
+                    help="map shared prompt prefixes onto existing KV pages "
+                         "(refcounted, copy-on-write; paged layout only; "
+                         "default: on when --kv-layout paged)")
+    ap.add_argument("--evict", default=None, choices=["on", "off"],
+                    help="priority admission may park a lower-priority "
+                         "in-flight decode's pages to host instead of "
+                         "queueing (paged layout only; default: on when "
+                         "--kv-layout paged)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true", help="print raw JSON")
     args = ap.parse_args()
 
     pl, mn = args.prompt_len, args.max_new
+    onoff = lambda v: None if v is None else v == "on"  # noqa: E731
     out = serve(args.arch, smoke=args.smoke, scale=args.scale,
                 trace=args.trace, rate=args.rate, requests=args.requests,
                 capacity=args.capacity, cache_len=args.cache_len,
@@ -148,7 +160,9 @@ def main() -> None:
                 scale_events=args.scale_events,
                 straggler_policy=args.straggler_policy,
                 kv_layout=args.kv_layout, page_size=args.page_size,
-                spec=args.spec, spec_k=args.spec_k, seed=args.seed)
+                spec=args.spec, spec_k=args.spec_k,
+                prefix_share=onoff(args.prefix_share),
+                evict=onoff(args.evict), seed=args.seed)
     if args.json:
         print(json.dumps(out, indent=2))
         return
@@ -166,6 +180,11 @@ def main() -> None:
               f"({out['spec_accepted_total']}/{out['spec_drafted_total']} "
               f"drafts), {out['tokens_per_dispatch']:.2f} tokens/dispatch "
               f"over {out['decode_dispatches']} dispatches")
+    if out["shared_page_hits_total"] or out["parked_total"]:
+        print(f"  kv: {out['shared_page_hits_total']} shared-page hits, "
+              f"{out['cow_breaks_total']} cow breaks, "
+              f"{out['parked_total']} parked / {out['restored_total']} "
+              f"restored ({out['kv_moved_bytes_total']} bytes moved)")
 
 
 if __name__ == "__main__":

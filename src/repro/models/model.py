@@ -306,10 +306,16 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int,
 def paged_decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
                       pos: jax.Array, table: jax.Array, lengths: jax.Array,
                       *, rules: AxisRules, window: Optional[int] = None,
-                      impl: str = "xla") -> Tuple[jax.Array, Dict[str, Any]]:
+                      impl: str = "xla",
+                      cow: Optional[Tuple[jax.Array, jax.Array]] = None
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One paged decode step.  token: (B, 1) int32; pos: (B,) per-row write
     positions; table: (B, P) block table; lengths: (B,) live tokens incl.
     this one (0 = inactive row, output garbage, writes -> null page).
+
+    cow: optional ((B,), (B,)) int32 (src, dst) page pairs — copy-on-write
+    share breaks fused into the scatter (see `transformer.block_decode_paged`;
+    rows without a break pass the null page for both).
 
     Returns (logits (B, 1, V), new cache)."""
     win = cfg.sliding_window if window is None else window
@@ -323,7 +329,7 @@ def paged_decode_step(cfg: ModelConfig, params, cache, token: jax.Array,
         bp, bc = xs
         x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table, lengths,
                                            bc, window=win, rules=rules,
-                                           impl=impl)
+                                           impl=impl, cow=cow)
         return x, new_bc
 
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
@@ -431,7 +437,9 @@ def verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
 def paged_verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
                       pos: jax.Array, table: jax.Array, lengths: jax.Array,
                       *, rules: AxisRules, window: Optional[int] = None,
-                      impl: str = "xla") -> Tuple[jax.Array, Dict[str, Any]]:
+                      impl: str = "xla",
+                      cow: Optional[Tuple[jax.Array, jax.Array]] = None
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Paged-layout speculative verification: the (B, Q) span twin of
     `paged_decode_step`, scoring all draft positions through
     `transformer.block_decode_paged` (XLA gather or the Pallas paged kernel
@@ -442,7 +450,9 @@ def paged_verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
     block table; lengths: (B,) live tokens INCLUDING the span's real tokens
     (pos + n_new; 0 = inactive row).  Draft padding past a row's length
     routes its writes to the null page and is causally invisible to valid
-    positions.  Returns (logits (B, Q, V), new cache)."""
+    positions.  cow: optional (src, dst) copy-on-write page pairs (only the
+    span's FIRST page can be shared, so one pair per row suffices).
+    Returns (logits (B, Q, V), new cache)."""
     win = cfg.sliding_window if window is None else window
     B, Q = tokens.shape
     x = _embed(cfg, params, tokens)
@@ -455,7 +465,7 @@ def paged_verify_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
         bp, bc = xs
         x, new_bc = tfm.block_decode_paged(cfg, bp, x, q_pos, table, lengths,
                                            bc, window=win, rules=rules,
-                                           impl=impl)
+                                           impl=impl, cow=cow)
         return x, new_bc
 
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))

@@ -385,7 +385,8 @@ def block_apply(cfg: ModelConfig, bp, x, positions, *, block_type=None,
 
 
 def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
-                       *, window=0, rules: AxisRules = None, impl="xla"):
+                       *, window=0, rules: AxisRules = None, impl="xla",
+                       cow=None):
     """Paged-KV block step over new tokens x: (B, Q, D) at positions
     q_pos: (B, Q).  Q == 1 is decode; Q > 1 is one chunked-prefill chunk.
 
@@ -393,6 +394,13 @@ def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
     every sequence; table: (B, P) int32 block table (-1 absent);
     lengths: (B,) live tokens INCLUDING the new ones (0 = inactive row:
     its writes route to the null page and its output is garbage).
+
+    cow: optional (src, dst) pair of (B,) int32 page ids for copy-on-write
+    share breaks: rows whose write position lands in a page shared with
+    another sequence have the page payload copied src -> dst BEFORE the new
+    rows scatter (the table already names dst), fused into this dispatch so
+    a break costs no extra launch.  Rows with no break use src == dst == 0
+    (the null page copies onto itself).
 
     New-token K/V rows scatter into exactly the owning pages (O(new tokens)
     writes — no pool-wide copy); attention gathers K/V through the table so
@@ -408,14 +416,22 @@ def block_decode_paged(cfg: ModelConfig, bp, x, q_pos, table, lengths, cache,
     h_in = rms_norm(x, bp["ln1"])
     q, k, v = attn.qkv_project(cfg, bp["attn"], h_in, q_pos, rules=rules)
 
+    ck, cv = cache["k"], cache["v"]
+    if cow is not None:
+        # copy-on-write page break: move the shared page's payload into the
+        # slot's private copy before this step's rows land in it
+        cow_src, cow_dst = cow
+        ck = ck.at[cow_dst].set(ck[cow_src])
+        cv = cv.at[cow_dst].set(cv[cow_src])
+
     # scatter the Q new K/V rows into their pages; tokens past a row's live
     # length (padding / inactive rows) route to the reserved null page 0
     valid = q_pos < lengths[:, None]
     pidx = jnp.take_along_axis(table, jnp.minimum(q_pos // ps, P - 1), axis=1)
     pg = jnp.where(valid, jnp.maximum(pidx, 0), 0).reshape(-1)
     off = (q_pos % ps).reshape(-1)
-    ck = cache["k"].at[pg, off].set(k.reshape((B * Q,) + k.shape[2:]))
-    cv = cache["v"].at[pg, off].set(v.reshape((B * Q,) + v.shape[2:]))
+    ck = ck.at[pg, off].set(k.reshape((B * Q,) + k.shape[2:]))
+    cv = cv.at[pg, off].set(v.reshape((B * Q,) + v.shape[2:]))
 
     if impl == "pallas":
         kind, HP, g_pad = attn.head_layout(cfg)

@@ -12,8 +12,15 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 slot-chunk -> worker map obeys the same scheduler-phase
                 ownership contract as training chunks)
 - `pages`     — paged KV bookkeeping: fixed-size token pages, per-slot
-                block tables, alloc/free/trim/defrag with SlotPool-style
-                invariant checks (page 0 reserved as the null write sink)
+                block tables with per-page REFCOUNTS (shared pages,
+                copy-on-write breaks), alloc/free/trim/defrag with
+                SlotPool-style invariant checks (page 0 reserved as the
+                null write sink)
+- `memory`    — `KVMemoryManager`: content-hash prefix index mapping
+                shared prompt prefixes onto existing physical pages,
+                COW break plans, host-parked eviction (park/restore moves
+                only a slot's live pages, re-prefills nothing), and the
+                bytes-moved accounting behind the O(moved-pages) claims
 - `spec`      — speculative decoding: pluggable drafters (prompt-lookup
                 n-gram, tiny draft model) + lossless greedy accept; slots
                 verify k drafts per tick in ONE (B, k+1) dispatch
@@ -27,6 +34,7 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 throughput / occupancy / page occupancy / admission bytes
 """
 from .engine import ServeEngine, ServeMetrics
+from .memory import KVMemoryManager, ParkedSeq
 from .pages import PageAllocator, PageError
 from .request import (Request, RequestState, poisson_arrivals,
                       synthetic_requests, trace_arrivals)
@@ -35,8 +43,8 @@ from .slots import SlotPool
 from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 __all__ = [
-    "DraftModelDrafter", "NgramDrafter", "PageAllocator", "PageError",
-    "Request", "RequestState", "ServeEngine", "ServeMetrics", "SlotPool",
-    "SlotScheduler", "greedy_accept", "poisson_arrivals",
-    "synthetic_requests", "trace_arrivals",
+    "DraftModelDrafter", "KVMemoryManager", "NgramDrafter", "PageAllocator",
+    "PageError", "ParkedSeq", "Request", "RequestState", "ServeEngine",
+    "ServeMetrics", "SlotPool", "SlotScheduler", "greedy_accept",
+    "poisson_arrivals", "synthetic_requests", "trace_arrivals",
 ]

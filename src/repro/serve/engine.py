@@ -54,6 +54,7 @@ from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
 from ..models import model as M
 from ..sharding import AxisRules
+from .memory import KVMemoryManager
 from .pages import PageAllocator, next_pow2
 from .request import Request, RequestState
 from .scheduler import SlotScheduler
@@ -81,6 +82,13 @@ class TickRecord:
     spec_drafted: int = 0  # draft tokens proposed this tick
     spec_accepted: int = 0  # draft tokens verification accepted this tick
     draft_dispatches: int = 0  # device dispatches spent DRAFTING this tick
+    # KV memory manager (prefix sharing / COW / eviction) deltas this tick
+    shared_page_hits: int = 0  # admission pages mapped onto existing pages
+    cow_breaks: int = 0  # copy-on-write share breaks fused into dispatches
+    parked: int = 0  # slots preempted to host this tick
+    restored: int = 0  # parked slots restored this tick
+    kv_moved_bytes: int = 0  # park + restore bytes moved (host <-> device)
+    shared_extra_pages: int = 0  # pages saved by sharing, end of tick
 
 
 @dataclasses.dataclass
@@ -91,7 +99,10 @@ class ServeMetrics:
         default_factory=list)  # (tick, k_before, k_after)
     suspend_events: List[Tuple[int, str]] = dataclasses.field(
         default_factory=list)  # (tick, "suspend" | "resume")
+    resize_moves: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list)  # (tick, k_after, slots_moved, bytes_moved)
     jit_cache_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    kv_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
 
     def summarize(self) -> Dict[str, Any]:
@@ -137,6 +148,20 @@ class ServeMetrics:
             "spec_drafted_total": int(drafted),
             "spec_accepted_total": int(accepted),
             "spec_acceptance_rate": (accepted / drafted if drafted else None),
+            # KV memory manager: sharing / COW / eviction / migration
+            "shared_page_hits_total": int(sum(t.shared_page_hits
+                                              for t in self.ticks)),
+            "cow_breaks_total": int(sum(t.cow_breaks for t in self.ticks)),
+            "parked_total": int(sum(t.parked for t in self.ticks)),
+            "restored_total": int(sum(t.restored for t in self.ticks)),
+            "kv_moved_bytes_total": int(sum(t.kv_moved_bytes
+                                            for t in self.ticks)),
+            "shared_extra_pages_mean": (float(np.mean(
+                [t.shared_extra_pages for t in self.ticks]))
+                if self.ticks else 0.0),
+            "resize_moved_bytes_total": int(sum(m[3]
+                                                for m in self.resize_moves)),
+            "kv_stats": dict(self.kv_stats),
             "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
             "scale_events": [list(e) for e in self.scale_events],
@@ -170,6 +195,8 @@ class ServeEngine:
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
                  paged_impl: str = "xla",
+                 prefix_share: Optional[bool] = None,
+                 evict: Optional[bool] = None,
                  spec: str = "off", spec_k: int = 4,
                  drafter: Optional[Any] = None,
                  draft_cfg: Optional[ModelConfig] = None,
@@ -186,6 +213,13 @@ class ServeEngine:
         if spec not in ("off", "ngram", "draft"):
             raise ValueError(f"spec must be 'off', 'ngram' or 'draft', "
                              f"got {spec!r}")
+        if kv_layout != "paged":
+            if prefix_share:
+                raise ValueError("prefix_share requires kv_layout='paged' "
+                                 "(sharing maps block-table pages)")
+            if evict:
+                raise ValueError("evict requires kv_layout='paged' "
+                                 "(parking moves pages, not rows)")
         self.cfg = cfg
         self.capacity = capacity
         self.cache_len = cache_len
@@ -193,6 +227,11 @@ class ServeEngine:
         self.kv_layout = kv_layout
         self.page_size = page_size
         self.paged_impl = paged_impl
+        # KV memory manager defaults: both ON for the paged layout (sharing
+        # and eviction never change token streams, only bytes moved)
+        self.prefix_share = (kv_layout == "paged" if prefix_share is None
+                             else bool(prefix_share))
+        self.evict = (kv_layout == "paged" if evict is None else bool(evict))
         self.chunked_prefill = (kv_layout == "paged" if chunked_prefill is None
                                 else chunked_prefill)
         self.prefill_chunk = prefill_chunk or prefill_bucket
@@ -256,12 +295,14 @@ class ServeEngine:
         self.max_pages_per_slot = cache_len // page_size
         if kv_layout == "paged":
             n_pages = capacity * self.max_pages_per_slot + 1  # +1: null page
-            self.pages: Optional[PageAllocator] = PageAllocator(
-                n_pages, page_size)
+            self.mem: Optional[KVMemoryManager] = KVMemoryManager(
+                n_pages, page_size, prefix_share=self.prefix_share)
+            self.pages: Optional[PageAllocator] = self.mem.pages
             self.blocks = M.init_paged_cache(cfg, n_pages,
                                              page_size)["blocks"]
             self.k_pos = None
         else:
+            self.mem = None
             self.pages = None
             cache = M.init_cache(cfg, capacity, cache_len, per_slot=True)
             self.blocks = cache["blocks"]
@@ -270,6 +311,10 @@ class ServeEngine:
                                    for v in jax.tree.leaves(self.blocks)))
         # host-side per-slot stream state
         self.next_tok = np.zeros((capacity, 1), np.int32)
+        # rolling KV-stats snapshot: tick deltas are measured against the
+        # PREVIOUS tick's end, so parks/restores driven between ticks (e.g.
+        # a cluster lease shrink) still land in the next tick's record
+        self._kv_prev = self.mem.stats() if self.mem is not None else None
         self._by_slot: Dict[int, Request] = {}
         self._prefilling: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, off)
         self.metrics = ServeMetrics()
@@ -283,6 +328,7 @@ class ServeEngine:
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
         self._insert_cache: Dict[Tuple[int, int, int], Any] = {}
         self._chunk_cache: Dict[Tuple[int, int, int], Any] = {}
+        self._restore_cache: Dict[Tuple[int, int], Any] = {}
         self.k = 0
         self.mesh: Optional[Mesh] = None
         self.resize(n_workers)
@@ -291,6 +337,30 @@ class ServeEngine:
     def _k_mesh(self, k: int) -> int:
         return max(1, min(k, len(self.devices)))
 
+    @property
+    def n_active_slots(self) -> int:
+        """Slots currently consuming KV: decoding + mid-prefill."""
+        return len(self._by_slot) + len(self._prefilling)
+
+    def _slot_workers(self) -> Tuple[List[int], Dict[int, int]]:
+        """Snapshot the live slots and their current worker assignment."""
+        live = sorted(set(self._by_slot) | set(self._prefilling))
+        return live, {s: self.scheduler.worker_of_slot(s) for s in live}
+
+    def _record_resize_moves(self, k: int, live: List[int],
+                             before: Dict[int, int]) -> None:
+        """Page-granular migration accounting for one scale event: only the
+        pages of slots whose worker changed count as moved state."""
+        moved = [s for s in live
+                 if self.scheduler.worker_of_slot(s) != before[s]]
+        if self.pages is not None:
+            nbytes = sum(self.pages.n_pages_of(s)
+                         for s in moved) * self._page_bytes
+        else:  # flat rows: a moved slot drags its whole cache row
+            nbytes = len(moved) * (self._pool_bytes // self.capacity)
+        self.metrics.resize_moves.append(
+            (self._tick, k, len(moved), int(nbytes)))
+
     def _build(self, km: int):
         mesh = mesh_from_devices(self.devices[:km], ("data",))
         rules = AxisRules(mesh)
@@ -298,18 +368,25 @@ class ServeEngine:
 
         if self.kv_layout == "paged":
             impl = self.paged_impl
+            # without prefix sharing no page can ever reach refcount 2, so
+            # the fused COW copy is dead work — trace it out entirely
+            use_cow = self.prefix_share
 
-            def decode(params, blocks, tok, pos, table, lengths):
+            def decode(params, blocks, tok, pos, table, lengths,
+                       cow_src, cow_dst):
                 logits, new_cache = M.paged_decode_step(
                     cfg, params, {"blocks": blocks}, tok, pos, table,
-                    lengths, rules=rules, impl=impl)
+                    lengths, rules=rules, impl=impl,
+                    cow=(cow_src, cow_dst) if use_cow else None)
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 return nxt, new_cache["blocks"]
 
-            def verify(params, blocks, tok, pos, table, lengths):
+            def verify(params, blocks, tok, pos, table, lengths,
+                       cow_src, cow_dst):
                 logits, new_cache = M.paged_verify_step(
                     cfg, params, {"blocks": blocks}, tok, pos, table,
-                    lengths, rules=rules, impl=impl)
+                    lengths, rules=rules, impl=impl,
+                    cow=(cow_src, cow_dst) if use_cow else None)
                 return (jnp.argmax(logits, -1).astype(jnp.int32),
                         new_cache["blocks"])
 
@@ -353,7 +430,7 @@ class ServeEngine:
         """Drop compiled prefill/insert/chunk fns whose mesh was evicted."""
         live = set(self._k_cache)
         for cache in (self._prefill_cache, self._insert_cache,
-                      self._chunk_cache):
+                      self._chunk_cache, self._restore_cache):
             for key in [k for k in cache if k[0] not in live]:
                 del cache[key]
 
@@ -363,16 +440,28 @@ class ServeEngine:
             "prefill_cache": len(self._prefill_cache),
             "insert_cache": len(self._insert_cache),
             "chunk_cache": len(self._chunk_cache),
+            "restore_cache": len(self._restore_cache),
         }
 
     def resize(self, k: int) -> None:
         """Elastic scale event: k logical workers, mesh over the first
         min(k, n_devices) devices.  KV state and in-flight requests carry
         over; only the sharding and the compiled step change.  Stale
-        compiled artifacts beyond `max_cached_meshes` are evicted here."""
+        compiled artifacts beyond `max_cached_meshes` are evicted here.
+
+        The migration cost is PAGE-GRANULAR: only pages owned by slots
+        whose worker assignment changed count as moved state (recorded in
+        `metrics.resize_moves`) — the slot-chunk rebalance itself is
+        minimal-churn, so a scale event costs O(moved pages), the serving
+        twin of training's chunk transfers, not O(pool).  (When the device
+        mesh itself changes, the single pool array is re-laid-out by
+        `device_put`; the accounting tracks the algorithmic cost that a
+        per-worker page-pool runtime would pay.)"""
         k = max(1, k)
         if self.scheduler.n_workers != k:
+            live, before = self._slot_workers()
             self.scheduler.set_workers(k)
+            self._record_resize_moves(k, live, before)
         km = self._k_mesh(k)
         mesh, rules, _, _ = _lru_get(self._k_cache, km,
                                      lambda: self._build(km),
@@ -454,6 +543,22 @@ class ServeEngine:
         return _lru_get(self._insert_cache, (km, n, bucket), build,
                         self.max_cached_fns)
 
+    def _restore_fn(self, n_pages: int):
+        """Scatter a parked sequence's host pages back into the (donated)
+        pools — the restore twin of `_insert_fn`, but the rows arrive
+        already paged so no chop is needed.  O(pages) transfer."""
+        km = self._k_mesh(self.k)
+
+        def build():
+            def restore(blocks, rows_k, rows_v, page_ids):
+                return {"k": blocks["k"].at[:, page_ids].set(rows_k),
+                        "v": blocks["v"].at[:, page_ids].set(rows_v)}
+
+            return jax.jit(restore, donate_argnums=(0,))
+
+        return _lru_get(self._restore_cache, (km, n_pages), build,
+                        self.max_cached_fns)
+
     def _chunk_fn(self, chunk: int, table_width: int, n: int):
         km = self._k_mesh(self.k)
         cfg, rules, impl = self.cfg, self.rules, self.paged_impl
@@ -491,9 +596,88 @@ class ServeEngine:
 
     def _release(self, req: Request, now: float) -> None:
         """Finish a request: return its pages (paged) and its slot."""
-        if self.pages is not None and req.slot is not None:
-            self.pages.free_slot(req.slot)
+        if self.mem is not None and req.slot is not None:
+            self.mem.release_slot(req.slot)
         self.scheduler.release(req, now)
+
+    # --- eviction: park / restore (page-granular preemption) --------------
+    def park(self, slot: int) -> int:
+        """Preempt the decoding request in `slot`: gather ONLY its live
+        pages to host memory (one O(pages) device->host copy, no
+        re-prefill on return), free its pages + slot, and re-queue the
+        request (state PARKED) for a later `restore` through admission.
+        Returns the bytes moved."""
+        if self.mem is None:
+            raise RuntimeError("park requires kv_layout='paged'")
+        req = self._by_slot.pop(slot, None)
+        if req is None:
+            raise KeyError(f"slot {slot} has no decoding request")
+        table = self.pages.table(slot)
+        idx = jnp.asarray(np.asarray(table, np.int32))
+        host = {name: np.asarray(arr[:, idx])
+                for name, arr in self.blocks.items()}
+        seq = self.mem.park(req.rid, slot, host,
+                            int(self.scheduler.pool.pos[slot]),
+                            int(self.next_tok[slot, 0]))
+        self.scheduler.pool.free(slot)
+        req.slot = None
+        req.state = RequestState.PARKED
+        self.scheduler.submit(req)  # rejoins its tenant queue (old arrival)
+        return seq.nbytes
+
+    def park_excess(self, n: int) -> int:
+        """Park up to `n` decoding slots, lowest priority first (latest
+        admitted within a priority) — the cluster lease-shrink hook.
+        Returns total bytes moved to host."""
+        moved = 0
+        for _ in range(max(0, n)):
+            victim = self._pick_victim()
+            if victim is None:
+                break
+            moved += self.park(victim)
+        return moved
+
+    def _pick_victim(self) -> Optional[int]:
+        """Lowest-priority, most-recently-admitted decoding slot."""
+        cands = [(req.priority, -(req.t_admitted or 0.0), slot)
+                 for slot, req in self._by_slot.items()]
+        return min(cands)[2] if cands else None
+
+    def _preempt_for(self, incoming: Request) -> bool:
+        """Scheduler hook: admit `incoming` over a STRICTLY lower-priority
+        in-flight decode by parking the victim (KV to host, no work lost).
+        Returns True when a slot was freed."""
+        if self.mem is None or not self.evict:
+            return False
+        victim = self._pick_victim()
+        if victim is None:
+            return False
+        if self._by_slot[victim].priority >= incoming.priority:
+            return False
+        self.park(victim)
+        return True
+
+    def _restore_slot(self, req: Request) -> int:
+        """Re-admit a parked request: fresh pages, ONE scatter of its
+        parked payload, decode state restored — the stream continues
+        bit-for-bit with zero prefill compute.  Returns bytes moved."""
+        seq, table = self.mem.restore(req.rid, req.slot)
+        nb = min(next_pow2(max(len(table), 1)), self.max_pages_per_slot)
+        ids = np.zeros(nb, np.int32)  # pad rows route to the null page
+        ids[: len(table)] = table
+        rows = {}
+        for name, arr in seq.pages.items():
+            pad = np.zeros((arr.shape[0], nb - arr.shape[1]) + arr.shape[2:],
+                           arr.dtype)
+            rows[name] = np.concatenate([arr, pad], axis=1)
+        self.blocks = self._restore_fn(nb)(
+            self.blocks, jnp.asarray(rows["k"]), jnp.asarray(rows["v"]),
+            jnp.asarray(ids))
+        req.state = RequestState.DECODING
+        self.next_tok[req.slot, 0] = seq.next_tok
+        self.scheduler.pool.pos[req.slot] = seq.live_tokens
+        self._by_slot[req.slot] = req
+        return seq.nbytes
 
     def _start_decoding(self, req: Request, nxt: int, now: float) -> None:
         """Common PREFILL -> DECODING (or immediate finish) transition once
@@ -510,19 +694,24 @@ class ServeEngine:
 
     def _do_prefill(self, admitted: Sequence[Request]) -> int:
         """Prefill this tick's admissions, one batched forward per shared
-        bucket length, and insert their KV into the pool.  Long prompts in
+        bucket length, and insert their KV into the pool.  PARKED requests
+        restore their host-parked pages instead (no model forward at all);
+        fresh paged admissions map their longest indexed prompt prefix onto
+        existing physical pages and scatter only the rest.  Long prompts in
         paged+chunked mode defer to `_advance_prefills` instead.  Returns
         modeled admission bytes written to the device KV pool."""
         direct: List[Request] = []
+        nbytes = 0
         for r in admitted:
+            if self.mem is not None and self.mem.has_parked(r.rid):
+                nbytes += self._restore_slot(r)
             # submit() already rejected prompt+max_new > cache_len, so the
             # chunked table below can never outgrow max_pages_per_slot
-            if (self.chunked_prefill and r.prompt_len > self.prefill_chunk):
-                self.pages.alloc_slot(r.slot, 0)
-                self._prefilling[r.slot] = (r, 0)
+            elif (self.chunked_prefill and r.prompt_len > self.prefill_chunk):
+                off = self.mem.admit_chunked(r.slot, r.prompt)
+                self._prefilling[r.slot] = (r, off)
             else:
                 direct.append(r)
-        nbytes = 0
         groups: Dict[int, List[Request]] = {}
         for r in direct:
             groups.setdefault(self._bucket(r.prompt_len), []).append(r)
@@ -540,9 +729,13 @@ class ServeEngine:
                 page_ids = np.zeros(n * bpp, np.int32)  # 0 -> null page
                 real = 0
                 for i, r in enumerate(group):
-                    tbl = self.pages.alloc_slot(r.slot, r.prompt_len)
-                    page_ids[i * bpp: i * bpp + len(tbl)] = tbl
-                    real += len(tbl)
+                    # shared prefix pages keep id 0 in write_ids: their
+                    # rows route to the null page (nothing written), the
+                    # block table points at the existing physical pages
+                    plan = self.mem.admit_slot(r.slot, r.prompt)
+                    page_ids[i * bpp: i * bpp + len(plan.write_ids)] = \
+                        plan.write_ids
+                    real += len(plan.table) - plan.shared_pages
                 self.blocks = self._insert_fn(n, bucket)(
                     self.blocks, rows_k, rows_v, jnp.asarray(page_ids))
                 nbytes += real * self._page_bytes
@@ -603,6 +796,9 @@ class ServeEngine:
             n_dispatch += 1
             nxt_np: Optional[np.ndarray] = None
             for i, (slot, req, off, end) in enumerate(group):
+                # index the pages this chunk just WROTE (never ahead of the
+                # writes, so a sharer can only ever map written pages)
+                self.mem.register_prefix(slot, req.prompt, upto=end)
                 if end >= req.prompt_len:
                     if nxt_np is None:
                         nxt_np = np.asarray(jax.block_until_ready(nxt))
@@ -633,9 +829,9 @@ class ServeEngine:
         """Compact live pages to the low physical ids (one gather over the
         pool); block tables are rewritten, token streams are unchanged.
         Returns True if a move happened."""
-        if self.pages is None:
+        if self.mem is None:
             return False
-        src = self.pages.defrag()
+        src = self.mem.defrag()  # also remaps the prefix index
         if src is None:
             return False
         idx = jnp.asarray(src)
@@ -663,13 +859,23 @@ class ServeEngine:
             self.metrics.requests.append(r)
 
     def _paged_batch_inputs(self, active: List[int], n_new: np.ndarray
-                            ) -> Tuple[np.ndarray, np.ndarray]:
+                            ) -> Tuple[np.ndarray, np.ndarray,
+                                       np.ndarray, np.ndarray]:
         """Grow each active slot's block table to cover its span of
         `n_new[slot]` pending writes and build the width-bucketed
-        (table, lengths) dispatch inputs — shared by the plain decode
-        (n_new == 1) and speculative verify (n_new == 1 + drafts) paths."""
+        (table, lengths, cow_src, cow_dst) dispatch inputs — shared by the
+        plain decode (n_new == 1) and speculative verify (n_new == 1 +
+        drafts) paths.  A slot whose first write lands in a SHARED page
+        breaks the share here (fresh private page in the table) and carries
+        the (old, new) pair so the dispatch copies the payload in-place;
+        rows without a break copy the null page onto itself."""
         pos = self.scheduler.pool.pos
+        cow_src = np.zeros(self.capacity, np.int32)
+        cow_dst = np.zeros(self.capacity, np.int32)
         for slot in active:
+            plan = self.mem.cow_plan(slot, int(pos[slot]))
+            if plan is not None:
+                cow_src[slot], cow_dst[slot] = plan
             self.pages.ensure(slot, int(pos[slot]) + int(n_new[slot]))
         width = self._page_bucket(
             max(self.pages.n_pages_of(s) for s in active))
@@ -677,7 +883,7 @@ class ServeEngine:
         lengths = np.zeros(self.capacity, np.int32)
         for slot in active:
             lengths[slot] = pos[slot] + n_new[slot]
-        return table, lengths
+        return table, lengths, cow_src, cow_dst
 
     def _spec_decode(self, active: List[int], verify_fn
                      ) -> Tuple[int, float, int, int, int]:
@@ -721,11 +927,13 @@ class ServeEngine:
             n_new[slot] = 1 + len(d)
 
         if self.kv_layout == "paged":
-            table, lengths = self._paged_batch_inputs(active, n_new)
+            table, lengths, cow_src, cow_dst = self._paged_batch_inputs(
+                active, n_new)
             vtok, self.blocks = verify_fn(
                 self.params, self.blocks, jnp.asarray(toks),
                 jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                jnp.asarray(lengths))
+                jnp.asarray(lengths), jnp.asarray(cow_src),
+                jnp.asarray(cow_dst))
         else:
             vtok, self.blocks, self.k_pos = verify_fn(
                 self.params, self.blocks, self.k_pos, jnp.asarray(toks),
@@ -753,9 +961,9 @@ class ServeEngine:
             if req.done():
                 del self._by_slot[slot]
                 self._release(req, now)
-            elif self.pages is not None:
+            elif self.mem is not None:
                 # rollback: pages allocated solely for rejected drafts
-                self.pages.trim(slot, int(sched.pool.pos[slot]))
+                self.mem.trim(slot, int(sched.pool.pos[slot]))
         return (emitted, t_step, drafted, accepted,
                 getattr(self.drafter, "dispatches_per_propose", 0))
 
@@ -776,16 +984,29 @@ class ServeEngine:
                                "before ticking")
         now = self._now()
         sched = self.scheduler
+        kv0 = self._kv_prev
 
         # ---- scheduler phase: policies may rescale/rebalance the pool ----
         stats: Dict = dict(self._last_stats)
         k_before = sched.n_workers
+        # only policies can rescale inside between_ticks; skip the per-slot
+        # worker snapshot on the hot path when none are installed
+        live, before = (self._slot_workers() if sched.policies
+                        else ([], {}))
         sched.between_ticks(stats)
         if sched.n_workers != k_before:
             self.metrics.scale_events.append(
                 (self._tick, k_before, sched.n_workers))
+            # policies resized the assignment in between_ticks, so resize()
+            # below only re-meshes; record the slot moves they caused here
+            self._record_resize_moves(sched.n_workers, live, before)
             self.resize(sched.n_workers)
-        admitted = sched.admit(now)
+        # priority admission: a full pool no longer blocks a high-priority
+        # request — a strictly lower-priority in-flight decode is parked
+        # (pages to host), not just queued behind
+        admitted = sched.admit(
+            now, preempt=self._preempt_for if (self.mem is not None
+                                               and self.evict) else None)
         admission_bytes = self._do_prefill(admitted) if admitted else 0
         n_chunks = 0
         n_chunk_dispatch = 0
@@ -809,12 +1030,14 @@ class ServeEngine:
                 pos_np = sched.pool.pos
                 t0 = time.perf_counter()
                 if self.kv_layout == "paged":
-                    table, lengths = self._paged_batch_inputs(
-                        active, np.ones(self.capacity, np.int32))
+                    table, lengths, cow_src, cow_dst = \
+                        self._paged_batch_inputs(
+                            active, np.ones(self.capacity, np.int32))
                     nxt, self.blocks = decode_fn(
                         self.params, self.blocks, jnp.asarray(self.next_tok),
                         jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                        jnp.asarray(lengths))
+                        jnp.asarray(lengths), jnp.asarray(cow_src),
+                        jnp.asarray(cow_dst))
                 else:
                     nxt, self.blocks, self.k_pos = decode_fn(
                         self.params, self.blocks, self.k_pos,
@@ -839,14 +1062,17 @@ class ServeEngine:
 
         if self.debug_checks:
             # page-leak guard: every live slot must hold EXACTLY the pages
-            # its live tokens need — a page kept for a rejected draft or
-            # leaked by an at-capacity finish fails the tick it happens
+            # its live tokens need, every refcount must equal the page's
+            # true reader count, and the prefix index must point only at
+            # live pages — a page kept for a rejected draft, leaked by an
+            # at-capacity finish, or a refcount drifting through a
+            # share/COW/park cycle fails the tick it happens
             sched.pool.check_invariants()
-            if self.pages is not None:
+            if self.mem is not None:
                 live = {s: int(sched.pool.pos[s]) for s in self._by_slot}
                 live.update({s: off for s, (_, off)
                              in self._prefilling.items()})
-                self.pages.check(live)
+                self.mem.check(live)
 
         # modeled per-worker timing attribution feeds the same policy
         # feedback loop as training (load-proportional split of the step)
@@ -860,6 +1086,21 @@ class ServeEngine:
         }
 
         self._stamp_cache_sizes()
+        kv = {}
+        if kv0 is not None:
+            kv1 = self.mem.stats()
+            self.metrics.kv_stats = kv1
+            self._kv_prev = kv1
+            delta = lambda k: kv1[k] - kv0[k]  # noqa: E731
+            kv = dict(
+                shared_page_hits=delta("shared_page_hits"),
+                cow_breaks=delta("cow_breaks"),
+                parked=delta("parked_total"),
+                restored=delta("restored_total"),
+                kv_moved_bytes=(delta("park_bytes")
+                                + delta("restore_bytes")),
+                shared_extra_pages=kv1["shared_extra"],
+            )
         rec = TickRecord(tick=self._tick, now=self._now(),
                          n_active=len(self._by_slot),
                          n_workers=sched.n_workers,
@@ -872,7 +1113,7 @@ class ServeEngine:
                          page_occupancy=(self.pages.occupancy()
                                          if self.pages else 0.0),
                          spec_drafted=drafted, spec_accepted=accepted,
-                         draft_dispatches=draft_disp)
+                         draft_dispatches=draft_disp, **kv)
         self.metrics.ticks.append(rec)
         self._tick += 1
         return rec

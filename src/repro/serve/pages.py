@@ -7,6 +7,13 @@ engine; this module only decides WHICH physical page backs WHICH logical
 (slot, token-range) and hands the engine int32 block tables to gather
 through.
 
+Pages are REFCOUNTED: a physical page may back the same logical token range
+of several slots at once (prefix sharing — identical prompt prefixes map to
+one set of pages, see `serve.memory.KVMemoryManager`).  A slot that must
+WRITE into a page it shares first breaks the share with `cow()`
+(copy-on-write): it gets a private page, the other readers keep the
+original.  Freeing a table only returns pages whose refcount drops to zero.
+
 Physical page 0 is reserved as the NULL page: it is never allocated, block
 tables use it as the routing target for masked writes (inactive batch rows,
 right-padded prompt tails), and every read through it is masked out by
@@ -15,7 +22,7 @@ decode step total — no branchy host-side row filtering on the hot path.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,8 +47,9 @@ class PageAllocator:
     """Allocator for a pool of `n_pages` physical pages of `page_size` tokens.
 
     Each slot owns an ordered block table: entry j backs token positions
-    [j*page_size, (j+1)*page_size).  Pages are exclusively owned; alloc is
-    O(1) pop, free is O(pages-of-slot).
+    [j*page_size, (j+1)*page_size).  Pages carry a refcount (number of
+    tables referencing them); alloc is O(1) pop, free is O(pages-of-slot)
+    and returns only pages whose last reference just dropped.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -54,7 +62,7 @@ class PageAllocator:
         # pop() hands out low page ids first (1, 2, ...)
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}  # slot -> ordered page ids
-        self._owner: Dict[int, int] = {}  # page -> slot
+        self._ref: Dict[int, int] = {}  # page -> number of tables holding it
 
     # --- capacity math ----------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -81,36 +89,87 @@ class PageAllocator:
                     f"page pool exhausted ({self.n_pages - 1} usable pages)")
             pg = self._free.pop()
             table.append(pg)
-            self._owner[pg] = slot
+            self._ref[pg] = 1
             added.append(pg)
         return added
 
+    def share(self, slot: int, pages: Sequence[int]) -> None:
+        """Append existing (already-referenced) pages to slot's table,
+        bumping their refcounts — the prefix-sharing admission path.  The
+        pages back the NEXT token positions of the slot's table, so sharing
+        must happen before any exclusive tail pages are allocated."""
+        if slot not in self._tables:
+            raise PageError(f"slot {slot} has no block table")
+        table = self._tables[slot]
+        for pg in pages:
+            if self._ref.get(pg, 0) <= 0:
+                raise PageError(f"share of unreferenced page {pg}")
+            if pg in table:
+                raise PageError(f"page {pg} already in slot {slot}'s table")
+            table.append(pg)
+            self._ref[pg] += 1
+
+    def _decref(self, pg: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        r = self._ref.get(pg)
+        if r is None:
+            raise PageError(f"decref of unreferenced page {pg}")
+        if r > 1:
+            self._ref[pg] = r - 1
+            return False
+        del self._ref[pg]
+        self._free.append(pg)
+        return True
+
     def free_slot(self, slot: int) -> List[int]:
-        """Release the slot's pages back to the pool; returns them."""
+        """Release the slot's table; returns the pages actually freed (last
+        reference dropped).  Shared pages survive for their other readers."""
         if slot not in self._tables:
             raise PageError(f"free of slot {slot} with no block table")
         pages = self._tables.pop(slot)
-        for pg in pages:
-            del self._owner[pg]
-        self._free.extend(reversed(pages))  # lowest ids handed out again first
-        return pages
+        # push in reverse so the lowest ids are handed out again first, but
+        # report freed pages in table order
+        return [pg for pg in reversed(pages) if self._decref(pg)][::-1]
 
     def trim(self, slot: int, n_tokens: int) -> List[int]:
-        """Shrink slot's table to cover exactly n_tokens, freeing the tail.
+        """Shrink slot's table to cover exactly n_tokens, dropping the tail
+        references.
 
         The speculative-decode rollback: pages allocated for draft tokens
         that verification then rejected go straight back to the free list.
-        Returns the freed pages (possibly empty)."""
+        Returns the pages actually freed (possibly empty)."""
         if slot not in self._tables:
             raise PageError(f"trim of slot {slot} with no block table")
         table = self._tables[slot]
         keep = self.pages_for(n_tokens)
-        freed = table[keep:]
+        dropped = table[keep:]
         del table[keep:]
-        for pg in freed:
-            del self._owner[pg]
-        self._free.extend(reversed(freed))
-        return freed
+        return [pg for pg in reversed(dropped) if self._decref(pg)][::-1]
+
+    def cow(self, slot: int, index: int) -> Tuple[int, int]:
+        """Copy-on-write break: replace the SHARED page at table position
+        `index` with a fresh private page.  Returns (old_page, new_page);
+        the caller owns copying the device payload old -> new before any
+        write lands in the new page.  The old page keeps its other readers.
+
+        Always satisfiable when a share exists: a pool sized for exclusive
+        worst-case occupancy has >= 1 free page whenever any page is shared.
+        """
+        if slot not in self._tables:
+            raise PageError(f"cow of slot {slot} with no block table")
+        table = self._tables[slot]
+        if not 0 <= index < len(table):
+            raise PageError(f"cow index {index} out of range for slot {slot}")
+        old = table[index]
+        if self._ref.get(old, 0) < 2:
+            raise PageError(f"cow of exclusively-owned page {old}")
+        if not self._free:
+            raise PageError("page pool exhausted during cow break")
+        new = self._free.pop()
+        table[index] = new
+        self._ref[new] = 1
+        self._ref[old] -= 1
+        return old, new
 
     # --- queries ----------------------------------------------------------
     @property
@@ -119,13 +178,30 @@ class PageAllocator:
 
     @property
     def n_used(self) -> int:
+        """Physical pages in use (each shared page counted once)."""
         return (self.n_pages - 1) - self.n_free
+
+    @property
+    def n_logical(self) -> int:
+        """Sum of table lengths — what exclusive ownership would cost."""
+        return sum(len(t) for t in self._tables.values())
+
+    @property
+    def n_shared_extra(self) -> int:
+        """Pages saved by sharing: logical references minus physical pages."""
+        return self.n_logical - self.n_used
+
+    def ref(self, pg: int) -> int:
+        return self._ref.get(pg, 0)
 
     def occupancy(self) -> float:
         return self.n_used / (self.n_pages - 1)
 
     def table(self, slot: int) -> List[int]:
         return list(self._tables.get(slot, ()))
+
+    def has_table(self, slot: int) -> bool:
+        return slot in self._tables
 
     def n_pages_of(self, slot: int) -> int:
         return len(self._tables.get(slot, ()))
@@ -157,37 +233,43 @@ class PageAllocator:
 
     # --- defrag -----------------------------------------------------------
     def defrag(self) -> Optional[np.ndarray]:
-        """Compact live pages into the lowest physical ids (slot order).
+        """Compact live pages into the lowest physical ids (slot order; a
+        shared page moves ONCE, at its first table appearance).
 
         Returns `src` (n_pages,) int32 with new_pool[i] = old_pool[src[i]],
         or None when the layout is already compact.  The caller owns moving
         the device-side page payloads with this gather; tables here are
-        rewritten in place.
+        rewritten in place.  Callers holding page ids outside the tables
+        (e.g. a prefix index) must remap them through the returned map.
         """
         order = [NULL_PAGE]
+        seen = {NULL_PAGE}
         for slot in sorted(self._tables):
-            order.extend(self._tables[slot])
+            for pg in self._tables[slot]:
+                if pg not in seen:  # shared pages appear in several tables
+                    seen.add(pg)
+                    order.append(pg)
         if order == list(range(len(order))):
             return None
-        live = set(order)
-        order.extend(p for p in range(self.n_pages) if p not in live)
+        order.extend(p for p in range(self.n_pages) if p not in seen)
         src = np.asarray(order, np.int32)
         new_id = {old: new for new, old in enumerate(order)}
         self._tables = {s: [new_id[p] for p in t]
                         for s, t in self._tables.items()}
-        self._owner = {new_id[p]: s for p, s in self._owner.items()}
+        self._ref = {new_id[p]: c for p, c in self._ref.items()}
         n_used = self.n_used
         self._free = list(range(self.n_pages - 1, n_used, -1))
         return src
 
     # --- invariants -------------------------------------------------------
     def check(self, live: Optional[Dict[int, int]] = None) -> None:
-        """Full leak guard: structural invariants plus — when `live` maps
-        each slot to its live token count — EXACT coverage: every live slot
-        holds exactly `pages_for(tokens)` pages and no other slot holds any.
-        The engine calls this each tick under `debug_checks=True`, so a page
-        kept for a rejected draft token or leaked by an at-capacity finish
-        fails the tick it happens."""
+        """Full leak guard: structural + refcount invariants plus — when
+        `live` maps each slot to its live token count — EXACT coverage:
+        every live slot holds exactly `pages_for(tokens)` pages and no other
+        slot holds any.  The engine calls this each tick under
+        `debug_checks=True`, so a page kept for a rejected draft token, a
+        refcount drifting from its true reader count, or a leak from an
+        at-capacity finish fails the tick it happens."""
         self.check_invariants()
         if live is None:
             return
@@ -204,26 +286,30 @@ class PageAllocator:
                     f"miss")
 
     def check_invariants(self) -> None:
-        """null page never allocated; free/owned disjoint and exhaustive;
-        tables and owner map agree; no page in two tables."""
+        """null page never allocated; free/referenced disjoint and
+        exhaustive; every refcount equals the page's true reader count
+        (tables referencing it); no page twice in one table."""
         free = set(self._free)
-        owned = set(self._owner)
+        referenced = set(self._ref)
         if len(free) != len(self._free):
             raise PageError("duplicate page on the free list")
-        if NULL_PAGE in free or NULL_PAGE in owned:
-            raise PageError("null page leaked into free/owned sets")
-        if free & owned:
-            raise PageError(f"pages both free and owned: {free & owned}")
-        if free | owned != set(range(1, self.n_pages)):
-            raise PageError("page leak: free+owned != usable pages")
-        seen: Dict[int, int] = {}
+        if NULL_PAGE in free or NULL_PAGE in referenced:
+            raise PageError("null page leaked into free/referenced sets")
+        if free & referenced:
+            raise PageError(f"pages both free and referenced: {free & referenced}")
+        if free | referenced != set(range(1, self.n_pages)):
+            raise PageError("page leak: free+referenced != usable pages")
+        counts: Dict[int, int] = {}
         for slot, table in self._tables.items():
+            if len(table) != len(set(table)):
+                raise PageError(f"slot {slot} holds a page twice")
             for pg in table:
-                if pg in seen:
-                    raise PageError(
-                        f"page {pg} in tables of slots {seen[pg]} and {slot}")
-                seen[pg] = slot
-                if self._owner.get(pg) != slot:
-                    raise PageError(f"owner map disagrees for page {pg}")
-        if seen.keys() != owned:
-            raise PageError("owner map and tables cover different pages")
+                counts[pg] = counts.get(pg, 0) + 1
+        if counts != self._ref:
+            drift = {p: (self._ref.get(p), counts.get(p))
+                     for p in set(counts) | set(self._ref)
+                     if self._ref.get(p) != counts.get(p)}
+            raise PageError(f"refcount drift (page: (ref, readers)): {drift}")
+        for pg, c in self._ref.items():
+            if c <= 0:
+                raise PageError(f"non-positive refcount on page {pg}")

@@ -18,6 +18,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODING = "decoding"
+    PARKED = "parked"  # preempted mid-decode; KV parked host-side
     FINISHED = "finished"
 
 
@@ -30,6 +31,7 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0  # seconds from workload start (open loop)
     tenant: str = "default"  # admission queue key (per-tenant fair sharing)
+    priority: int = 0  # higher may preempt (park) lower in-flight decodes
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
@@ -88,17 +90,27 @@ def synthetic_requests(n: int, *, vocab_size: int, arrivals: np.ndarray,
                        max_new_tokens: tuple = (4, 16),
                        rng: Optional[np.random.Generator] = None,
                        tenant: str = "default",
+                       priority: int = 0,
+                       shared_prefix: Optional[Sequence[int]] = None,
                        rid_base: int = 0) -> List[Request]:
     """Random-token requests with lengths drawn uniformly from the given
-    inclusive ranges, stamped with the supplied arrival offsets."""
+    inclusive ranges, stamped with the supplied arrival offsets.
+
+    shared_prefix: optional common token header prepended to every prompt
+    (few-shot / system-prompt workloads — the prefix-sharing fast path);
+    prompt_len then sizes only the unique suffix."""
     rng = rng or np.random.default_rng(0)
     assert len(arrivals) == n
+    head = (np.asarray(list(shared_prefix), np.int32)
+            if shared_prefix is not None else np.zeros(0, np.int32))
     reqs = []
     for i in range(n):
         lp = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
         mn = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
         prompt = rng.integers(0, vocab_size, size=lp).astype(np.int32)
+        prompt = np.concatenate([head, prompt]) if len(head) else prompt
         reqs.append(Request(rid=rid_base + i, prompt=prompt,
                             max_new_tokens=mn, tenant=tenant,
+                            priority=priority,
                             arrival_time=float(arrivals[i])))
     return reqs

@@ -48,6 +48,10 @@ class SlotScheduler:
                                      np.random.default_rng(seed))
         self.policies = list(policies)
         self.max_admit_per_tick = max_admit_per_tick
+        # optional ceiling on concurrently ACTIVE slots (cluster lease caps:
+        # a shrunken lease parks slots and this stops admission from
+        # immediately restoring them past what the lease can serve)
+        self.active_cap: Optional[int] = None
         self.sim_time = 0.0  # tick index; policies key scale events on it
         self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
         self._queues: Dict[str, List[Request]] = {}  # tenant -> FCFS queue
@@ -134,28 +138,56 @@ class SlotScheduler:
         # sorted insertion keeps FCFS-by-arrival within each tenant queue
         bisect.insort(q, req, key=lambda r: r.arrival_time)
 
-    def admit(self, now: float) -> List[Request]:
+    def admit(self, now: float, *,
+              preempt: Optional[Callable[[Request], bool]] = None
+              ) -> List[Request]:
         """Admit arrived requests into free slots: weighted round-robin over
         tenants with an arrived head-of-line request (stride pick on
         admitted/weight, exact ties broken by the earliest waiting head so
         equal-weight tenants stay FCFS-fair), FCFS within a tenant, bounded
-        by free slots and `max_admit_per_tick`."""
+        by free slots and `max_admit_per_tick`.
+
+        preempt: optional engine hook enabling PRIORITY admission when the
+        pool is full — called with the highest-priority waiting head; if it
+        parks a strictly lower-priority in-flight slot (returning True) the
+        freed slot admits that head this tick instead of queueing it."""
         admitted: List[Request] = []
-        while self.pool.n_free and len(admitted) < self.max_admit_per_tick:
+        while len(admitted) < self.max_admit_per_tick:
             eligible = [t for t, q in self._queues.items()
                         if q and q[0].arrival_time <= now]
             if not eligible:
                 break
-            tenant = stride_pick(
-                self._admitted, self.tenant_weights, eligible,
-                tiebreak=lambda t: self._queues[t][0].arrival_time)
-            req = self._queues[tenant].pop(0)
+            room = self.pool.n_free and (self.active_cap is None
+                                         or self.pool.n_used < self.active_cap)
+            if room:
+                tenant = stride_pick(
+                    self._admitted, self.tenant_weights, eligible,
+                    tiebreak=lambda t: self._queues[t][0].arrival_time)
+                req = self._queues[tenant].pop(0)
+            else:
+                if preempt is None:
+                    break
+                # full pool (or lease cap reached): only the highest-
+                # priority waiting head may force its way in by evicting
+                # (parking) a running victim
+                tenant = max(eligible,
+                             key=lambda t: (self._queues[t][0].priority,
+                                            -self._queues[t][0].arrival_time))
+                req = self._queues[tenant][0]
+                if not preempt(req):
+                    break  # no strictly lower-priority victim to park
+                # remove by IDENTITY: parking re-queued the victim, and in a
+                # shared tenant its older arrival sorts AHEAD of this head —
+                # pop(0) here would re-admit the victim we just parked
+                q = self._queues[tenant]
+                q.pop(next(i for i, r in enumerate(q) if r is req))
             if not self._queues[tenant]:
                 del self._queues[tenant]
             self._admitted[tenant] = self._admitted.get(tenant, 0.0) + 1.0
             req.slot = self.pool.alloc(req.rid)
             req.state = RequestState.PREFILL
-            req.t_admitted = now
+            if req.t_admitted is None:  # parked re-admissions keep the first
+                req.t_admitted = now
             admitted.append(req)
         return admitted
 

@@ -245,6 +245,45 @@ def test_paged_vs_flat_across_resize(cfg):
     assert m.summarize()["requests_finished"] == 8
 
 
+def test_defrag_mid_prefill_with_shared_pages(cfg):
+    """Defrag while slots are MID-PREFILL and pages are shared: a shared
+    page sits in several block tables, so defrag must emit it exactly once
+    and remap every table + the prefix index (the old single-owner defrag
+    duplicated it, corrupting the gather map).  The leak guard must pass
+    immediately after the move and streams must match the no-defrag run."""
+    rng = np.random.default_rng(7)
+    head = rng.integers(0, cfg.vocab_size, size=16)
+    mk = lambda: synthetic_requests(  # noqa: E731
+        4, vocab_size=cfg.vocab_size,
+        arrivals=np.array([0.0, 0.02, 0.3, 0.32]), prompt_len=(18, 24),
+        max_new_tokens=(3, 5), shared_prefix=head,
+        rng=np.random.default_rng(8))
+    kw = dict(capacity=4, cache_len=64, prefill_bucket=8, n_workers=1,
+              seed=0, kv_layout="paged", prefill_chunk=8, debug_checks=True)
+    ref_eng = ServeEngine(cfg, **kw)
+    want = _streams(ref_eng.run(mk()))
+    eng = ServeEngine(cfg, **kw)
+    eng.submit(mk())
+    eng._now()
+    defragged_mid_prefill = 0
+    for _ in range(200):
+        if not (eng._by_slot or eng._prefilling
+                or eng.scheduler.has_pending):
+            break
+        with set_mesh(eng.mesh):
+            eng.tick()
+        if eng._prefilling:  # the satellite case: defrag DURING a prefill
+            if eng.defrag():
+                defragged_mid_prefill += 1
+            live = {s: int(eng.scheduler.pool.pos[s]) for s in eng._by_slot}
+            live.update({s: off for s, (_, off) in eng._prefilling.items()})
+            eng.mem.check(live)
+    assert defragged_mid_prefill > 0, "no defrag ran while mid-prefill"
+    assert _streams(eng.metrics) == want
+    assert eng.mem.stats()["shared_page_hits"] > 0  # sharing was in play
+    assert eng.pages.n_used == 0
+
+
 def test_defrag_mid_run_preserves_streams(cfg):
     flat = ServeEngine(cfg, capacity=4, cache_len=32, prefill_bucket=8,
                        n_workers=1, seed=0)
@@ -413,7 +452,7 @@ def test_prefill_cache_bounded_and_exposed(cfg):
     sizes = eng.metrics.summarize()["jit_cache_sizes"]
     assert sizes["prefill_cache"] <= 2
     assert set(sizes) == {"k_cache", "prefill_cache", "insert_cache",
-                          "chunk_cache"}
+                          "chunk_cache", "restore_cache"}
 
 
 def test_resize_evicts_stale_mesh_dependents(cfg):
@@ -424,8 +463,10 @@ def test_resize_evicts_stale_mesh_dependents(cfg):
     eng._prefill_cache[(99, 8)] = "stale"
     eng._insert_cache[(99, 1, 8)] = "stale"
     eng._chunk_cache[(99, 8, 2)] = "stale"
+    eng._restore_cache[(99, 4)] = "stale"
     eng.resize(2)  # single CPU device: km stays 1, 99 falls off the LRU
     assert 99 not in eng._k_cache
     assert not any(k[0] == 99 for k in eng._prefill_cache)
     assert not any(k[0] == 99 for k in eng._insert_cache)
     assert not any(k[0] == 99 for k in eng._chunk_cache)
+    assert not any(k[0] == 99 for k in eng._restore_cache)
