@@ -18,6 +18,9 @@ Three modes:
   tokens per tick, tokens per decode dispatch (the claim: speculation
   raises useful work per dispatch >= 1.3x at equal output), per-tick decode
   p50, and tokens/s.
+- ``--attribution``: the ``--ab`` workload rerun with tick-phase tracing
+  ON — per-phase host-ms vs device-ms breakdown (p50/p95) for both arms
+  and the dominant serialized host phase (the async-overlap target).
 - ``--share``: prefix-sharing on/off A/B on a few-shot shared-header
   workload (every prompt repeats the same long header + a unique
   question).  Both arms run the paged engine on the SAME trace and must
@@ -37,6 +40,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core import ElasticScalingPolicy, ScaleEvent
+from repro.obs import Tracer, dominant_host_phase, phase_attribution
 from repro.serve import (Request, ServeEngine, poisson_arrivals,
                          synthetic_requests)
 
@@ -177,6 +181,66 @@ def run_ab(arch: str = "smollm-360m", *, fast: bool = False,
         print(f"# WARNING: paged decode p50 not faster on this run "
               f"({rec['decode_p50_speedup']}); see BENCH_serve.json for the "
               f"reference record")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Tick-time attribution: where does a serve tick actually go?
+# ---------------------------------------------------------------------------
+
+
+def run_attribution(arch: str = "smollm-360m", *, fast: bool = False,
+                    dry_run: bool = False, seed: int = 0) -> dict:
+    """Paged-vs-flat on the mixed workload with tick-phase tracing ON:
+    per-phase host-ms vs device-ms breakdown (totals + p50/p95 of span
+    durations) and the dominant SERIALIZED host phase per arm — the
+    measurement behind the async-overlap roadmap item (the paged engine
+    wins decode p50 but spends more host time inside the synchronous
+    tick).  Cold ticks include jit compiles inside their dispatch spans
+    (marked by ``jit.miss`` instants); the p50 columns are robust to those
+    outliers, the totals are not — read them together with `jit_misses`."""
+    cfg = smoke_variant(get_config(arch))
+    capacity = 4 if dry_run else 8
+    cache_len = 256 if dry_run else 512
+    kw = dict(capacity=capacity, cache_len=cache_len, prefill_bucket=16,
+              n_workers=1, seed=seed)
+    arms = {}
+    for layout in ("flat", "paged"):
+        trc = Tracer(name=f"serve_bench:{layout}")
+        engine = ServeEngine(cfg, kv_layout=layout, tracer=trc, **kw)
+        engine.run(_mixed_workload(cfg, fast=fast or dry_run, seed=seed),
+                   max_ticks=40 if dry_run else 100_000)
+        attr = phase_attribution(trc)
+        tick_h = trc.registry.histogram("serve.tick_s")
+        pct = lambda q: (tick_h.percentile(q) or 0.0) * 1e3  # noqa: E731
+        arms[layout] = {
+            "attribution": attr,
+            "dominant_host_phase": dominant_host_phase(attr),
+            "tick_ms_p50": pct(50),
+            "tick_ms_p95": pct(95),
+            "ticks": tick_h.count,
+            "jit_misses": trc.registry.counter("serve.jit_misses").value,
+            "tokens_generated": int(
+                trc.registry.counter("serve.tokens_emitted").value),
+        }
+    rec = {
+        "bench": "serve_bench_attribution",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "capacity": capacity,
+        "cache_len": cache_len,
+        "flat": arms["flat"],
+        "paged": arms["paged"],
+        # the headline: the host phase an overlapped tick loop must hide
+        # first on the arm the paper's claims ride on
+        "dominant_serial_host_phase": arms["paged"]["dominant_host_phase"],
+    }
+    if not dry_run:
+        assert rec["dominant_serial_host_phase"] is not None
+        assert (arms["flat"]["tokens_generated"]
+                == arms["paged"]["tokens_generated"]), \
+            "tracing must not change token output across layouts"
     return rec
 
 
@@ -350,6 +414,7 @@ def main(fast: bool = False) -> None:
     print(json.dumps(run_ab(fast=fast)))
     print(json.dumps(run_spec(fast=fast)))
     print(json.dumps(run_share(fast=fast)))
+    print(json.dumps(run_attribution(fast=fast)))
 
 
 def _cli() -> None:
@@ -368,6 +433,9 @@ def _cli() -> None:
     ap.add_argument("--share", action="store_true",
                     help="prefix-sharing on/off A/B on the few-shot "
                          "shared-header workload")
+    ap.add_argument("--attribution", action="store_true",
+                    help="traced paged-vs-flat run: per-phase host/device "
+                         "tick-time breakdown + dominant host phase")
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
@@ -378,6 +446,9 @@ def _cli() -> None:
     if args.ab:
         rec = run_ab(args.arch, fast=args.fast, dry_run=args.dry_run,
                      seed=args.seed)
+    elif args.attribution:
+        rec = run_attribution(args.arch, fast=args.fast,
+                              dry_run=args.dry_run, seed=args.seed)
     elif args.share:
         rec = run_share(args.arch, fast=args.fast, dry_run=args.dry_run,
                         seed=args.seed)

@@ -23,6 +23,9 @@ from repro.configs import get_config, smoke_variant
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="stream per-tick cluster stats (demand/alloc/"
+                         "nodes_used) to FILE as JSON lines")
     args = ap.parse_args()
 
     n, f, iters = (1000, 24, 10) if args.fast else (3000, 48, 20)
@@ -53,8 +56,12 @@ if __name__ == "__main__":
 
     pool = DevicePool(8, pst=[1.0] * 6 + [1.5] * 2)
     orch = ClusterOrchestrator(pool, [trainA, trainB, server], trace,
-                               dt=1.0, max_ticks=500)
+                               dt=1.0, max_ticks=500,
+                               trace_out=args.trace_out)
     report = orch.run()
+    if args.trace_out:
+        print(f"per-tick stats streamed to {args.trace_out} "
+              f"({report.ticks} lines)")
 
     print(f"makespan {report.makespan:.0f}s  "
           f"utilization {report.utilization:.2f}  "

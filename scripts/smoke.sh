@@ -12,6 +12,15 @@ echo "== serve smoke (10 requests, elastic k: 1 -> 2 -> 1) =="
 python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
     --requests 10 --seed 0
 
+echo "== traced serve run + Chrome trace validation =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 8 --kv-layout paged --trace-out /tmp/serve_trace.json --seed 0
+python -m repro.obs.trace --validate /tmp/serve_trace.json \
+    --require schedule,admit,prefill.dispatch,decode.dispatch,device_wait
+
+echo "== disabled-tracing overhead guard =="
+python -m pytest -q tests/test_obs.py -k overhead
+
 echo "== paged-attention kernel parity (Pallas interpret vs jnp oracle) =="
 python -m repro.kernels.paged_attention --selftest
 

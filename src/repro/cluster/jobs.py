@@ -336,11 +336,13 @@ class ServeJob(ClusterJob):
                  kv_layout: str = "flat", page_size: int = 8,
                  prefix_share: Optional[bool] = None,
                  evict: Optional[bool] = None,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None):
         super().__init__(spec)
         self._sim_now = 0.0
         self.slots_per_node = slots_per_node
         self.ticks_per_dt = ticks_per_dt
+        # note: sharing one tracer across jobs merges their engine-phase
+        # tracks; give each job its own tracer to keep traces separable
         self.engine = ServeEngine(
             cfg, capacity=capacity, cache_len=cache_len,
             prefill_bucket=prefill_bucket, n_workers=1,
@@ -348,7 +350,7 @@ class ServeJob(ClusterJob):
             tenant_weights=tenant_weights, seed=seed,
             kv_layout=kv_layout, page_size=page_size,
             prefix_share=prefix_share, evict=evict,
-            clock=lambda: self._sim_now)
+            clock=lambda: self._sim_now, tracer=tracer)
         self._rid = 0
         self.expected_requests = 0
         self.no_more_arrivals = False  # set by the orchestrator from the trace

@@ -20,9 +20,11 @@ migration counts, plus per-job summaries and the full allocation timeline.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.fairshare import jain_index
+from ..obs import NULL_TRACER, Tracer
 from .allocator import FairShareAllocator, JobDemand, UsageLedger
 from .jobs import ClusterJob, JobState, ServeJob
 from .pool import DevicePool
@@ -63,7 +65,14 @@ class ClusterOrchestrator:
                  trace: ClusterTrace, *,
                  allocator: Optional[FairShareAllocator] = None,
                  usage_half_life: Optional[float] = None,
-                 dt: float = 1.0, max_ticks: int = 10_000):
+                 dt: float = 1.0, max_ticks: int = 10_000,
+                 tracer: Optional[Tracer] = None,
+                 trace_out: Optional[str] = None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # per-tick stats stream: one JSON line per TickStats, flushed as
+        # written so a long run can be tailed / survives a crash
+        self.trace_out = trace_out
+        self._trace_fh = None
         self.pool = pool
         self.trace = trace
         self.jobs: Dict[str, ClusterJob] = {}
@@ -113,21 +122,25 @@ class ClusterOrchestrator:
                 j.no_more_arrivals = (
                     self.now >= self.trace.last_event_time(j.spec.name))
 
+        trc = self.tracer
         demands = {j.spec.name: j.demand(self.now) for j in active}
         # priority-desc order so the pool grants fast free nodes to the
         # most entitled jobs first
         ordered = sorted(
             active, key=lambda j: (-j.spec.priority, -j.spec.weight,
                                    j.spec.name))
-        jds = [JobDemand(j.spec.name, demands[j.spec.name], j.spec.weight,
-                         j.spec.priority) for j in ordered]
-        alloc = self.allocator.allocate(
-            self.pool.n_nodes, jds,
-            credit=self.ledger.snapshot() if self.ledger else None)
-        if self.ledger is not None:
-            self.ledger.update(alloc, jds, self.dt)
-        leases = self.pool.reassign(
-            {j.spec.name: alloc.get(j.spec.name, 0) for j in ordered})
+        migrations0 = self.pool.migrations
+        with trc.span("allocator.decide", t=self.now,
+                      demand=sum(demands.values())):
+            jds = [JobDemand(j.spec.name, demands[j.spec.name],
+                             j.spec.weight, j.spec.priority) for j in ordered]
+            alloc = self.allocator.allocate(
+                self.pool.n_nodes, jds,
+                credit=self.ledger.snapshot() if self.ledger else None)
+            if self.ledger is not None:
+                self.ledger.update(alloc, jds, self.dt)
+            leases = self.pool.reassign(
+                {j.spec.name: alloc.get(j.spec.name, 0) for j in ordered})
 
         for j in ordered:
             name = j.spec.name
@@ -135,14 +148,24 @@ class ClusterOrchestrator:
             prev = self._prev_alloc.get(name, 0)
             if a != prev:
                 j.resizes += 1
+                trc.instant("lease_change", track=name, prev=prev, alloc=a)
             if a < prev and demands[name] > a:
                 j.preemptions += 1
+                trc.instant("preemption", track=name, prev=prev, alloc=a)
+                trc.count("cluster.preemptions")
             j.on_allocation(leases.get(name, []),
                             self.pool.psts_of(leases.get(name, [])), self.now)
 
         for j in ordered:
-            j.advance(self.dt, self.now)
             name = j.spec.name
+            kv0 = getattr(j, "kv_moved_bytes", 0)
+            with trc.span("advance", track=name, nodes=alloc.get(name, 0)):
+                j.advance(self.dt, self.now)
+            moved = getattr(j, "kv_moved_bytes", 0) - kv0
+            if moved:
+                # page-granular preemption cost, per job per tick
+                trc.instant("kv_moved", track=name, bytes=moved)
+                trc.count("cluster.kv_moved_bytes", moved)
             j.node_time += alloc.get(name, 0) * self.dt
             if demands[name] > 0:
                 j.presence_time += self.dt
@@ -153,6 +176,18 @@ class ClusterOrchestrator:
                         alloc={n: a for n, a in alloc.items() if a},
                         nodes_used=sum(alloc.values()))
         self.timeline.append(rec)
+        if trc.enabled:
+            trc.count("cluster.ticks")
+            trc.count("cluster.migrations",
+                      self.pool.migrations - migrations0)
+            trc.gauge("cluster.nodes_used", rec.nodes_used)
+            trc.observe("cluster.demand", sum(demands.values()))
+        if self.trace_out is not None:
+            if self._trace_fh is None:
+                self._trace_fh = open(self.trace_out, "w")
+            self._trace_fh.write(
+                json.dumps(dataclasses.asdict(rec)) + "\n")
+            self._trace_fh.flush()
         self._prev_alloc = alloc
         self.now += self.dt
         return rec
@@ -166,7 +201,14 @@ class ClusterOrchestrator:
     def run(self) -> ClusterReport:
         while self._work_remains() and len(self.timeline) < self.max_ticks:
             self.step()
+        self.close_trace()
         return self.report()
+
+    def close_trace(self) -> None:
+        """Flush and close the --trace-out JSONL stream (idempotent)."""
+        if self._trace_fh is not None:
+            self._trace_fh.close()
+            self._trace_fh = None
 
     def report(self) -> ClusterReport:
         finish_times = [j.finish_time for j in self.jobs.values()
@@ -177,6 +219,14 @@ class ClusterOrchestrator:
         total = self.pool.n_nodes * len(span_ticks)
         rates = [j.node_time / (j.spec.weight * j.presence_time)
                  for j in self.jobs.values() if j.presence_time > 0]
+        # re-back the report's headline quantities onto the registry so
+        # they export alongside the serve metrics (report shape unchanged)
+        trc = self.tracer
+        if trc.enabled:
+            trc.gauge("cluster.makespan", makespan)
+            trc.gauge("cluster.utilization",
+                      used / total if total else 0.0)
+            trc.gauge("cluster.fairness_jain", jain_index(rates))
         return ClusterReport(
             makespan=makespan,
             utilization=used / total if total else 0.0,

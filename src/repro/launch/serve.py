@@ -19,6 +19,8 @@ import numpy as np
 
 from ..configs import get_config, smoke_variant
 from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
+from ..obs import Tracer, dominant_host_phase, format_attribution, \
+    phase_attribution
 from ..serve import ServeEngine, poisson_arrivals, synthetic_requests
 from .train import scale_config
 
@@ -70,8 +72,11 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           straggler_policy: bool = False, kv_layout: str = "flat",
           page_size: int = 8, spec: str = "off", spec_k: int = 4,
           prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
-          seed: int = 0) -> Dict:
-    """Run an open-loop serving workload; returns the metrics summary."""
+          seed: int = 0, trace_out: Optional[str] = None) -> Dict:
+    """Run an open-loop serving workload; returns the metrics summary.
+    `trace_out` enables tick-phase tracing and writes a Chrome trace-event
+    JSON file (load in Perfetto / chrome://tracing) plus a per-phase
+    host-vs-device attribution in the returned summary."""
     cfg = get_config(arch)
     cfg = smoke_variant(cfg) if smoke else scale_config(cfg, scale)
     rng = np.random.default_rng(seed)
@@ -90,16 +95,23 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
     if straggler_policy:
         policies.append(StragglerMitigationPolicy())
 
+    tracer = Tracer(name=f"serve:{arch}") if trace_out else None
     engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
                          prefill_bucket=prefill_bucket, n_workers=workers,
                          policies=policies, kv_layout=kv_layout,
                          page_size=page_size, spec=spec, spec_k=spec_k,
                          prefix_share=prefix_share, evict=evict,
-                         seed=seed)
+                         seed=seed, tracer=tracer)
     metrics = engine.run(reqs)
     out = metrics.summarize()
     out["arch"] = arch
     out["capacity"] = capacity
+    if tracer is not None:
+        tracer.save(trace_out)
+        attr = phase_attribution(tracer)
+        out["attribution"] = attr
+        out["dominant_host_phase"] = dominant_host_phase(attr)
+        out["trace_out"] = trace_out
     return out
 
 
@@ -147,6 +159,10 @@ def main() -> None:
                          "queueing (paged layout only; default: on when "
                          "--kv-layout paged)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="enable tick-phase tracing and write a Chrome "
+                         "trace-event JSON file (Perfetto-loadable); also "
+                         "prints the host/device attribution table")
     ap.add_argument("--json", action="store_true", help="print raw JSON")
     args = ap.parse_args()
 
@@ -162,7 +178,8 @@ def main() -> None:
                 kv_layout=args.kv_layout, page_size=args.page_size,
                 spec=args.spec, spec_k=args.spec_k,
                 prefix_share=onoff(args.prefix_share),
-                evict=onoff(args.evict), seed=args.seed)
+                evict=onoff(args.evict), seed=args.seed,
+                trace_out=args.trace_out)
     if args.json:
         print(json.dumps(out, indent=2))
         return
@@ -185,6 +202,11 @@ def main() -> None:
               f"{out['cow_breaks_total']} cow breaks, "
               f"{out['parked_total']} parked / {out['restored_total']} "
               f"restored ({out['kv_moved_bytes_total']} bytes moved)")
+    if "attribution" in out:
+        print(f"  trace written to {out['trace_out']}; tick-time "
+              f"attribution (dominant host phase: "
+              f"{out['dominant_host_phase']}):")
+        print(format_attribution(out["attribution"]))
 
 
 if __name__ == "__main__":

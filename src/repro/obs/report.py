@@ -1,0 +1,94 @@
+"""Tick-time attribution: turn a tracer's spans into a per-phase
+host-vs-device breakdown.
+
+This is the measurement behind the async-overlap roadmap item: the paged
+engine wins decode p50 but loses end-to-end tokens/s because host phases
+(scheduling, drafting, COW planning, chunked prefill) serialize with device
+compute inside one synchronous tick.  `phase_attribution` quantifies
+exactly that — for every track (= engine phase, or cluster job) it sums
+span time split by ``cat`` ("host" vs "device") and reports p50/p95 of the
+per-span durations — and `dominant_host_phase` names the phase whose host
+time an overlapped tick loop should hide first.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .metrics import percentile
+from .trace import TraceEvent, Tracer
+
+
+def phase_attribution(tracer_or_events, *,
+                      percentiles: Sequence[float] = (50, 95),
+                      exclude: Iterable[str] = ("tick",),
+                      ) -> Dict[str, Dict[str, Optional[float]]]:
+    """Per-track timing breakdown from finished spans.
+
+    Returns ``{track: {count, host_ms_total, host_ms_p50, ...,
+    device_ms_total, device_ms_p50, ...}}``.  Root/envelope tracks that
+    merely contain the others (default: ``tick``) are excluded, and within
+    each (track, host/device) lane only the OUTERMOST spans are summed — a
+    detail span nested inside its phase envelope on the same track adds
+    trace-viewer depth without double-counting the phase's time."""
+    events = (tracer_or_events.events
+              if isinstance(tracer_or_events, Tracer) else tracer_or_events)
+    skip = set(exclude)
+    # sort longest-first on ts ties: a parent sharing its child's start
+    # time must win the outermost sweep
+    spans = sorted((e for e in events if e.ph == "X" and e.track not in skip),
+                   key=lambda e: (e.ts, -e.dur))
+    open_end: Dict[tuple, float] = {}
+    per: Dict[str, Dict[str, List[float]]] = {}
+    for e in spans:
+        kind = "device" if e.cat == "device" else "host"
+        if e.ts < open_end.get((e.track, kind), -1.0):
+            continue  # nested inside a span already counted for this lane
+        open_end[(e.track, kind)] = e.ts + e.dur
+        per.setdefault(e.track, {"host": [], "device": []})[kind].append(
+            e.dur * 1e3)
+    out: Dict[str, Dict[str, Optional[float]]] = {}
+    for track in sorted(per):
+        rec: Dict[str, Optional[float]] = {}
+        n = 0
+        for kind in ("host", "device"):
+            vals = per[track][kind]
+            n += len(vals)
+            rec[f"{kind}_ms_total"] = sum(vals)
+            for q in percentiles:
+                key = f"{kind}_ms_p{int(q) if float(q).is_integer() else q}"
+                rec[key] = percentile(vals, q) if vals else None
+        rec["count"] = n
+        out[track] = rec
+    return out
+
+
+def dominant_host_phase(attribution: Dict[str, Dict[str, Optional[float]]]
+                        ) -> Optional[str]:
+    """The phase with the most serialized HOST time — the direct input to
+    the async-overlap work: this is the phase to move off the tick's
+    critical path first.  Device-wait time never wins here by construction
+    (it is accounted under ``device_ms_*``)."""
+    best: Optional[str] = None
+    best_ms = 0.0
+    for track, rec in attribution.items():
+        ms = rec.get("host_ms_total") or 0.0
+        if ms > best_ms:
+            best, best_ms = track, ms
+    return best
+
+
+def format_attribution(attribution: Dict[str, Dict[str, Optional[float]]]
+                       ) -> str:
+    """Human-readable table (used by the serve CLI's --trace-out path)."""
+    lines = [f"  {'phase':<16s} {'host ms':>10s} {'p50':>8s} {'p95':>8s} "
+             f"{'device ms':>10s} {'spans':>6s}"]
+    order = sorted(attribution,
+                   key=lambda t: -(attribution[t]["host_ms_total"] or 0.0))
+    fmt = lambda v: f"{v:8.2f}" if v is not None else "     n/a"  # noqa: E731
+    for track in order:
+        r = attribution[track]
+        lines.append(
+            f"  {track:<16s} {r['host_ms_total'] or 0.0:10.2f} "
+            f"{fmt(r.get('host_ms_p50'))} {fmt(r.get('host_ms_p95'))} "
+            f"{r['device_ms_total'] or 0.0:10.2f} {r['count']:6d}")
+    return "\n".join(lines)

@@ -53,6 +53,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
 from ..models import model as M
+from ..obs import MetricsRegistry, NULL_TRACER, Tracer
 from ..sharding import AxisRules
 from .memory import KVMemoryManager
 from .pages import PageAllocator, next_pow2
@@ -105,62 +106,111 @@ class ServeMetrics:
     kv_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
 
-    def summarize(self) -> Dict[str, Any]:
+    def to_registry(self, registry: Optional[MetricsRegistry] = None
+                    ) -> MetricsRegistry:
+        """Re-back the serve telemetry onto an `obs.MetricsRegistry`: every
+        quantity `summarize()` reports becomes a typed counter / gauge /
+        histogram under ``serve.*`` — the same data, pluggable into any
+        exporter.  `summarize()` itself reads from this registry."""
+        reg = registry if registry is not None else MetricsRegistry()
         done = [r for r in self.requests if r.state is RequestState.FINISHED]
-        ttfts = np.array([r.ttft() for r in done if r.ttft() is not None])
-        tpots = np.array([r.tpot() for r in done if r.tpot() is not None])
-        qdel = np.array([r.t_admitted - r.arrival_time for r in done
-                         if r.t_admitted is not None])
-        toks = sum(r.n_generated for r in done)
-        pct = (lambda a, q: float(np.percentile(a, q)) if len(a) else None)
-        occ = np.array([t.occupancy for t in self.ticks])
-        pocc = np.array([t.page_occupancy for t in self.ticks])
-        emitted = sum(t.tokens_emitted for t in self.ticks)
+        reg.gauge("serve.requests_total").set(len(self.requests))
+        reg.gauge("serve.requests_finished").set(len(done))
+        h_ttft = reg.histogram("serve.ttft_s")
+        h_tpot = reg.histogram("serve.tpot_s")
+        h_qdel = reg.histogram("serve.queue_delay_s")
+        for r in done:
+            if r.ttft() is not None:
+                h_ttft.observe(r.ttft())
+            if r.tpot() is not None:
+                h_tpot.observe(r.tpot())
+            if r.t_admitted is not None:
+                h_qdel.observe(r.t_admitted - r.arrival_time)
+        reg.counter("serve.tokens_generated").inc(
+            sum(r.n_generated for r in done))
+        per_tick = {
+            "serve.tokens_emitted": "tokens_emitted",
+            "serve.admission_bytes": "admission_bytes",
+            "serve.prefill_chunks": "prefill_chunks",
+            "serve.prefill_dispatches": "prefill_dispatches",
+            "serve.draft_dispatches": "draft_dispatches",
+            "serve.spec_drafted": "spec_drafted",
+            "serve.spec_accepted": "spec_accepted",
+            "serve.shared_page_hits": "shared_page_hits",
+            "serve.cow_breaks": "cow_breaks",
+            "serve.parked": "parked",
+            "serve.restored": "restored",
+            "serve.kv_moved_bytes": "kv_moved_bytes",
+        }
+        for metric, field in per_tick.items():
+            reg.counter(metric).inc(
+                sum(getattr(t, field) for t in self.ticks))
+        reg.counter("serve.solver_dispatches").inc(
+            sum(1 for t in self.ticks if t.tokens_emitted))
+        reg.counter("serve.resize_moved_bytes").inc(
+            sum(m[3] for m in self.resize_moves))
+        h_occ = reg.histogram("serve.occupancy")
+        h_pocc = reg.histogram("serve.page_occupancy")
+        h_shx = reg.histogram("serve.shared_extra_pages")
+        h_dec = reg.histogram("serve.decode_s")
+        for t in self.ticks:
+            h_occ.observe(t.occupancy)
+            h_pocc.observe(t.page_occupancy)
+            h_shx.observe(t.shared_extra_pages)
+            if t.decode_s > 0:
+                h_dec.observe(t.decode_s)
+        reg.gauge("serve.n_ticks").set(len(self.ticks))
+        reg.gauge("serve.wall_s").set(self.wall_s)
+        return reg
+
+    def summarize(self) -> Dict[str, Any]:
+        reg = self.to_registry()
+        cnt = lambda n: int(reg.counter(n).value)  # noqa: E731
+        hist = lambda n: reg.histogram(n)  # noqa: E731
+        pct = (lambda h, q: float(np.percentile(h.values, q))
+               if h.values else None)
+        done = int(reg.gauge("serve.requests_finished").value)
+        toks = cnt("serve.tokens_generated")
+        emitted = cnt("serve.tokens_emitted")
         # per-dispatch efficiency charges the drafter's own model dispatches
         # too (draft-model speculation pays 2 dispatches/tick; ngram 1)
-        draft_disp = sum(t.draft_dispatches for t in self.ticks)
-        dispatches = sum(1 for t in self.ticks if t.tokens_emitted) \
-            + draft_disp
-        drafted = sum(t.spec_drafted for t in self.ticks)
-        accepted = sum(t.spec_accepted for t in self.ticks)
+        draft_disp = cnt("serve.draft_dispatches")
+        dispatches = cnt("serve.solver_dispatches") + draft_disp
+        drafted = cnt("serve.spec_drafted")
+        accepted = cnt("serve.spec_accepted")
+        mean = lambda n: hist(n).mean or 0.0  # noqa: E731
         return {
-            "requests_finished": len(done),
-            "requests_total": len(self.requests),
+            "requests_finished": done,
+            "requests_total": int(reg.gauge("serve.requests_total").value),
             "tokens_generated": toks,
             "tokens_per_s": toks / self.wall_s if self.wall_s else 0.0,
-            "ttft_p50_s": pct(ttfts, 50), "ttft_p99_s": pct(ttfts, 99),
-            "tpot_p50_s": pct(tpots, 50), "tpot_p99_s": pct(tpots, 99),
-            "queue_delay_p50_s": pct(qdel, 50),
-            "queue_delay_p99_s": pct(qdel, 99),
-            "occupancy_mean": float(occ.mean()) if len(occ) else 0.0,
-            "page_occupancy_mean": float(pocc.mean()) if len(pocc) else 0.0,
-            "admission_bytes_total": int(sum(t.admission_bytes
-                                             for t in self.ticks)),
-            "prefill_chunks_total": int(sum(t.prefill_chunks
-                                            for t in self.ticks)),
-            "prefill_dispatches_total": int(sum(t.prefill_dispatches
-                                                for t in self.ticks)),
+            "ttft_p50_s": pct(hist("serve.ttft_s"), 50),
+            "ttft_p99_s": pct(hist("serve.ttft_s"), 99),
+            "tpot_p50_s": pct(hist("serve.tpot_s"), 50),
+            "tpot_p99_s": pct(hist("serve.tpot_s"), 99),
+            "queue_delay_p50_s": pct(hist("serve.queue_delay_s"), 50),
+            "queue_delay_p99_s": pct(hist("serve.queue_delay_s"), 99),
+            "occupancy_mean": mean("serve.occupancy"),
+            "page_occupancy_mean": mean("serve.page_occupancy"),
+            "admission_bytes_total": cnt("serve.admission_bytes"),
+            "prefill_chunks_total": cnt("serve.prefill_chunks"),
+            "prefill_dispatches_total": cnt("serve.prefill_dispatches"),
             # speculative decode: useful work per decode dispatch
             "decode_dispatches": int(dispatches),
             "draft_dispatches": int(draft_disp),
             "tokens_per_dispatch": (emitted / dispatches if dispatches
                                     else 0.0),
-            "spec_drafted_total": int(drafted),
-            "spec_accepted_total": int(accepted),
+            "spec_drafted_total": drafted,
+            "spec_accepted_total": accepted,
             "spec_acceptance_rate": (accepted / drafted if drafted else None),
             # KV memory manager: sharing / COW / eviction / migration
-            "shared_page_hits_total": int(sum(t.shared_page_hits
-                                              for t in self.ticks)),
-            "cow_breaks_total": int(sum(t.cow_breaks for t in self.ticks)),
-            "parked_total": int(sum(t.parked for t in self.ticks)),
-            "restored_total": int(sum(t.restored for t in self.ticks)),
-            "kv_moved_bytes_total": int(sum(t.kv_moved_bytes
-                                            for t in self.ticks)),
-            "shared_extra_pages_mean": (float(np.mean(
-                [t.shared_extra_pages for t in self.ticks]))
-                if self.ticks else 0.0),
-            "resize_moved_bytes_total": int(sum(m[3]
-                                                for m in self.resize_moves)),
+            "shared_page_hits_total": cnt("serve.shared_page_hits"),
+            "cow_breaks_total": cnt("serve.cow_breaks"),
+            "parked_total": cnt("serve.parked"),
+            "restored_total": cnt("serve.restored"),
+            "kv_moved_bytes_total": cnt("serve.kv_moved_bytes"),
+            "shared_extra_pages_mean": mean("serve.shared_extra_pages"),
+            "resize_moved_bytes_total": cnt("serve.resize_moved_bytes"),
             "kv_stats": dict(self.kv_stats),
             "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
@@ -170,10 +220,21 @@ class ServeMetrics:
         }
 
 
-def _lru_get(cache: Dict, key, build: Callable[[], Any], cap: int):
-    """Move-to-end LRU over an insertion-ordered dict."""
+def _lru_get(cache: Dict, key, build: Callable[[], Any], cap: int,
+             tracer: Optional[Tracer] = None, label: str = ""):
+    """Move-to-end LRU over an insertion-ordered dict.  A miss is a jit
+    retrace/compile: when a tracer is attached it gets an instant
+    ``jit.miss`` event and the build runs under a ``jit.build`` span, so
+    cache churn (e.g. resize storms evicting executables) is visible in
+    the trace instead of showing up as a mysteriously slow phase."""
     if key in cache:
         cache[key] = cache.pop(key)
+    elif tracer is not None and tracer.enabled:
+        tracer.instant("jit.miss", track="jit", label=label, key=str(key))
+        tracer.count("serve.jit_misses")
+        with tracer.span("jit.build", track="jit", label=label,
+                         key=str(key)):
+            cache[key] = build()
     else:
         cache[key] = build()
     while len(cache) > cap:
@@ -202,6 +263,7 @@ class ServeEngine:
                  draft_cfg: Optional[ModelConfig] = None,
                  draft_params: Optional[Any] = None,
                  debug_checks: bool = False,
+                 tracer: Optional[Tracer] = None,
                  max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
@@ -220,6 +282,9 @@ class ServeEngine:
             if evict:
                 raise ValueError("evict requires kv_layout='paged' "
                                  "(parking moves pages, not rows)")
+        # phase tracing: NULL_TRACER's disabled fast path keeps the default
+        # un-traced run bit-identical and a single attribute check slower
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.capacity = capacity
         self.cache_len = cache_len
@@ -254,7 +319,7 @@ class ServeEngine:
         self.scheduler = SlotScheduler(
             capacity, n_workers=n_workers, slots_per_chunk=slots_per_chunk,
             policies=policies, max_admit_per_tick=max_admit_per_tick,
-            seed=seed, tenant_weights=tenant_weights)
+            seed=seed, tenant_weights=tenant_weights, tracer=self.tracer)
         # external simulation clock (cluster orchestrator); None = wall clock
         self._clock = clock
         self.suspended = False
@@ -291,12 +356,17 @@ class ServeEngine:
                                              seed=seed)
         else:  # spec == "ngram"
             self.drafter = NgramDrafter()
+        if self.drafter is not None:
+            # drafters are pluggable objects: hand them the engine tracer so
+            # their own jit caches emit jit.miss events onto the same trace
+            self.drafter.tracer = self.tracer
 
         self.max_pages_per_slot = cache_len // page_size
         if kv_layout == "paged":
             n_pages = capacity * self.max_pages_per_slot + 1  # +1: null page
             self.mem: Optional[KVMemoryManager] = KVMemoryManager(
-                n_pages, page_size, prefix_share=self.prefix_share)
+                n_pages, page_size, prefix_share=self.prefix_share,
+                tracer=self.tracer)
             self.pages: Optional[PageAllocator] = self.mem.pages
             self.blocks = M.init_paged_cache(cfg, n_pages,
                                              page_size)["blocks"]
@@ -465,7 +535,8 @@ class ServeEngine:
         km = self._k_mesh(k)
         mesh, rules, _, _ = _lru_get(self._k_cache, km,
                                      lambda: self._build(km),
-                                     self.max_cached_meshes)
+                                     self.max_cached_meshes,
+                                     self.tracer, "k_mesh")
         self._evict_stale()
         if mesh is not self.mesh:
             self.params = jax.device_put(self.params,
@@ -521,7 +592,7 @@ class ServeEngine:
             return jax.jit(prefill)
 
         return _lru_get(self._prefill_cache, (km, bucket), build,
-                        self.max_cached_fns)
+                        self.max_cached_fns, self.tracer, "prefill")
 
     def _insert_fn(self, n: int, bucket: int):
         """Paged admission scatter: writes ONLY the admitted requests' pages
@@ -541,7 +612,7 @@ class ServeEngine:
             return jax.jit(insert, donate_argnums=(0,))
 
         return _lru_get(self._insert_cache, (km, n, bucket), build,
-                        self.max_cached_fns)
+                        self.max_cached_fns, self.tracer, "insert")
 
     def _restore_fn(self, n_pages: int):
         """Scatter a parked sequence's host pages back into the (donated)
@@ -557,7 +628,7 @@ class ServeEngine:
             return jax.jit(restore, donate_argnums=(0,))
 
         return _lru_get(self._restore_cache, (km, n_pages), build,
-                        self.max_cached_fns)
+                        self.max_cached_fns, self.tracer, "restore")
 
     def _chunk_fn(self, chunk: int, table_width: int, n: int):
         km = self._k_mesh(self.k)
@@ -574,7 +645,7 @@ class ServeEngine:
             return jax.jit(step, donate_argnums=(1,))
 
         return _lru_get(self._chunk_cache, (km, chunk, table_width, n),
-                        build, self.max_cached_fns)
+                        build, self.max_cached_fns, self.tracer, "chunk")
 
     @property
     def _page_bytes(self) -> int:
@@ -612,17 +683,18 @@ class ServeEngine:
         req = self._by_slot.pop(slot, None)
         if req is None:
             raise KeyError(f"slot {slot} has no decoding request")
-        table = self.pages.table(slot)
-        idx = jnp.asarray(np.asarray(table, np.int32))
-        host = {name: np.asarray(arr[:, idx])
-                for name, arr in self.blocks.items()}
-        seq = self.mem.park(req.rid, slot, host,
-                            int(self.scheduler.pool.pos[slot]),
-                            int(self.next_tok[slot, 0]))
-        self.scheduler.pool.free(slot)
-        req.slot = None
-        req.state = RequestState.PARKED
-        self.scheduler.submit(req)  # rejoins its tenant queue (old arrival)
+        with self.tracer.span("park", rid=req.rid, slot=slot):
+            table = self.pages.table(slot)
+            idx = jnp.asarray(np.asarray(table, np.int32))
+            host = {name: np.asarray(arr[:, idx])
+                    for name, arr in self.blocks.items()}
+            seq = self.mem.park(req.rid, slot, host,
+                                int(self.scheduler.pool.pos[slot]),
+                                int(self.next_tok[slot, 0]))
+            self.scheduler.pool.free(slot)
+            req.slot = None
+            req.state = RequestState.PARKED
+            self.scheduler.submit(req)  # rejoins tenant queue (old arrival)
         return seq.nbytes
 
     def park_excess(self, n: int) -> int:
@@ -661,22 +733,24 @@ class ServeEngine:
         """Re-admit a parked request: fresh pages, ONE scatter of its
         parked payload, decode state restored — the stream continues
         bit-for-bit with zero prefill compute.  Returns bytes moved."""
-        seq, table = self.mem.restore(req.rid, req.slot)
-        nb = min(next_pow2(max(len(table), 1)), self.max_pages_per_slot)
-        ids = np.zeros(nb, np.int32)  # pad rows route to the null page
-        ids[: len(table)] = table
-        rows = {}
-        for name, arr in seq.pages.items():
-            pad = np.zeros((arr.shape[0], nb - arr.shape[1]) + arr.shape[2:],
-                           arr.dtype)
-            rows[name] = np.concatenate([arr, pad], axis=1)
-        self.blocks = self._restore_fn(nb)(
-            self.blocks, jnp.asarray(rows["k"]), jnp.asarray(rows["v"]),
-            jnp.asarray(ids))
-        req.state = RequestState.DECODING
-        self.next_tok[req.slot, 0] = seq.next_tok
-        self.scheduler.pool.pos[req.slot] = seq.live_tokens
-        self._by_slot[req.slot] = req
+        with self.tracer.span("restore", rid=req.rid, slot=req.slot):
+            seq, table = self.mem.restore(req.rid, req.slot)
+            nb = min(next_pow2(max(len(table), 1)), self.max_pages_per_slot)
+            ids = np.zeros(nb, np.int32)  # pad rows route to the null page
+            ids[: len(table)] = table
+            rows = {}
+            for name, arr in seq.pages.items():
+                pad = np.zeros(
+                    (arr.shape[0], nb - arr.shape[1]) + arr.shape[2:],
+                    arr.dtype)
+                rows[name] = np.concatenate([arr, pad], axis=1)
+            self.blocks = self._restore_fn(nb)(
+                self.blocks, jnp.asarray(rows["k"]), jnp.asarray(rows["v"]),
+                jnp.asarray(ids))
+            req.state = RequestState.DECODING
+            self.next_tok[req.slot, 0] = seq.next_tok
+            self.scheduler.pool.pos[req.slot] = seq.live_tokens
+            self._by_slot[req.slot] = req
         return seq.nbytes
 
     def _start_decoding(self, req: Request, nxt: int, now: float) -> None:
@@ -708,7 +782,8 @@ class ServeEngine:
             # submit() already rejected prompt+max_new > cache_len, so the
             # chunked table below can never outgrow max_pages_per_slot
             elif (self.chunked_prefill and r.prompt_len > self.prefill_chunk):
-                off = self.mem.admit_chunked(r.slot, r.prompt)
+                with self.tracer.span("prefix_index", rid=r.rid):
+                    off = self.mem.admit_chunked(r.slot, r.prompt)
                 self._prefilling[r.slot] = (r, off)
             else:
                 direct.append(r)
@@ -722,29 +797,36 @@ class ServeEngine:
             for i, r in enumerate(group):
                 toks[i, : r.prompt_len] = r.prompt
                 lens[i] = r.prompt_len
+            trc = self.tracer
             if self.kv_layout == "paged":
-                nxt, rows_k, rows_v = self._prefill_fn(bucket)(
-                    self.params, jnp.asarray(toks), jnp.asarray(lens))
+                with trc.span("prefill.dispatch", bucket=bucket, n=n):
+                    nxt, rows_k, rows_v = self._prefill_fn(bucket)(
+                        self.params, jnp.asarray(toks), jnp.asarray(lens))
                 bpp = bucket // self.page_size
                 page_ids = np.zeros(n * bpp, np.int32)  # 0 -> null page
                 real = 0
-                for i, r in enumerate(group):
-                    # shared prefix pages keep id 0 in write_ids: their
-                    # rows route to the null page (nothing written), the
-                    # block table points at the existing physical pages
-                    plan = self.mem.admit_slot(r.slot, r.prompt)
-                    page_ids[i * bpp: i * bpp + len(plan.write_ids)] = \
-                        plan.write_ids
-                    real += len(plan.table) - plan.shared_pages
-                self.blocks = self._insert_fn(n, bucket)(
-                    self.blocks, rows_k, rows_v, jnp.asarray(page_ids))
+                with trc.span("prefix_index", n=n):
+                    for i, r in enumerate(group):
+                        # shared prefix pages keep id 0 in write_ids: their
+                        # rows route to the null page (nothing written), the
+                        # block table points at the existing physical pages
+                        plan = self.mem.admit_slot(r.slot, r.prompt)
+                        page_ids[i * bpp: i * bpp + len(plan.write_ids)] = \
+                            plan.write_ids
+                        real += len(plan.table) - plan.shared_pages
+                with trc.span("prefill.insert", track="prefill"):
+                    self.blocks = self._insert_fn(n, bucket)(
+                        self.blocks, rows_k, rows_v, jnp.asarray(page_ids))
                 nbytes += real * self._page_bytes
             else:
-                nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
-                    self.params, jnp.asarray(toks), jnp.asarray(lens))
-                self._insert([r.slot for r in group], blocks_rows, k_pos_rows)
+                with trc.span("prefill.dispatch", bucket=bucket, n=n):
+                    nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
+                        self.params, jnp.asarray(toks), jnp.asarray(lens))
+                    self._insert([r.slot for r in group], blocks_rows,
+                                 k_pos_rows)
                 nbytes += self._pool_bytes  # at[].set rebuilds the pool
-            nxt = np.asarray(jax.block_until_ready(nxt))
+            with trc.span("device_wait", cat="device", track="prefill"):
+                nxt = np.asarray(jax.block_until_ready(nxt))
             now = self._now()
             for i, r in enumerate(group):
                 self._start_decoding(r, int(nxt[i]), now)
@@ -789,9 +871,10 @@ class ServeEngine:
                 toks[i, : end - off] = req.prompt[off:end]
                 offs[i], ends[i] = off, end
                 tbl[i] = full[slot]
-            nxt, self.blocks = self._chunk_fn(C, width, nb)(
-                self.params, self.blocks, jnp.asarray(toks),
-                jnp.asarray(offs), jnp.asarray(ends), jnp.asarray(tbl))
+            with self.tracer.span("prefill.chunk", width=width, n=n):
+                nxt, self.blocks = self._chunk_fn(C, width, nb)(
+                    self.params, self.blocks, jnp.asarray(toks),
+                    jnp.asarray(offs), jnp.asarray(ends), jnp.asarray(tbl))
             n_chunks += n
             n_dispatch += 1
             nxt_np: Optional[np.ndarray] = None
@@ -801,7 +884,9 @@ class ServeEngine:
                 self.mem.register_prefix(slot, req.prompt, upto=end)
                 if end >= req.prompt_len:
                     if nxt_np is None:
-                        nxt_np = np.asarray(jax.block_until_ready(nxt))
+                        with self.tracer.span("device_wait", cat="device",
+                                              track="prefill"):
+                            nxt_np = np.asarray(jax.block_until_ready(nxt))
                     finished.append(slot)
                     self._start_decoding(req, int(nxt_np[i]), self._now())
                 else:
@@ -869,21 +954,22 @@ class ServeEngine:
         breaks the share here (fresh private page in the table) and carries
         the (old, new) pair so the dispatch copies the payload in-place;
         rows without a break copy the null page onto itself."""
-        pos = self.scheduler.pool.pos
-        cow_src = np.zeros(self.capacity, np.int32)
-        cow_dst = np.zeros(self.capacity, np.int32)
-        for slot in active:
-            plan = self.mem.cow_plan(slot, int(pos[slot]))
-            if plan is not None:
-                cow_src[slot], cow_dst[slot] = plan
-            self.pages.ensure(slot, int(pos[slot]) + int(n_new[slot]))
-        width = self._page_bucket(
-            max(self.pages.n_pages_of(s) for s in active))
-        table = self.pages.table_array(self.capacity, width, only=active)
-        lengths = np.zeros(self.capacity, np.int32)
-        for slot in active:
-            lengths[slot] = pos[slot] + n_new[slot]
-        return table, lengths, cow_src, cow_dst
+        with self.tracer.span("cow_plan", n=len(active)):
+            pos = self.scheduler.pool.pos
+            cow_src = np.zeros(self.capacity, np.int32)
+            cow_dst = np.zeros(self.capacity, np.int32)
+            for slot in active:
+                plan = self.mem.cow_plan(slot, int(pos[slot]))
+                if plan is not None:
+                    cow_src[slot], cow_dst[slot] = plan
+                self.pages.ensure(slot, int(pos[slot]) + int(n_new[slot]))
+            width = self._page_bucket(
+                max(self.pages.n_pages_of(s) for s in active))
+            table = self.pages.table_array(self.capacity, width, only=active)
+            lengths = np.zeros(self.capacity, np.int32)
+            for slot in active:
+                lengths[slot] = pos[slot] + n_new[slot]
+            return table, lengths, cow_src, cow_dst
 
     def _spec_decode(self, active: List[int], verify_fn
                      ) -> Tuple[int, float, int, int, int]:
@@ -903,67 +989,73 @@ class ServeEngine:
         # decode_s and the per-worker policy feedback starts HERE, so a
         # slow drafter (e.g. the draft model's own forwards) is visible
         t0 = time.perf_counter()
-        contexts = []
-        for slot in active:
-            r = self._by_slot[slot]
-            contexts.append(np.concatenate(
-                [np.asarray(r.prompt, np.int64),
-                 np.asarray(r.generated, np.int64)]))
-        proposals = self.drafter.propose(contexts, k)
-        toks = np.zeros((self.capacity, Q), np.int32)
-        n_new = np.zeros(self.capacity, np.int32)
-        drafts: Dict[int, np.ndarray] = {}
-        for i, slot in enumerate(active):
-            r = self._by_slot[slot]
-            # draft budget: never past the KV capacity or the request's
-            # remaining token budget (wasted verification positions)
-            budget = min(k, self.cache_len - 1 - int(pos_np[slot]),
-                         r.max_new_tokens - r.n_generated - 1)
-            d = np.asarray(proposals[i], np.int64)[: max(budget, 0)]
-            drafts[slot] = d
-            toks[slot, 0] = self.next_tok[slot, 0]
-            if len(d):
-                toks[slot, 1: 1 + len(d)] = d
-            n_new[slot] = 1 + len(d)
+        with self.tracer.span("draft", n=len(active), k=k):
+            contexts = []
+            for slot in active:
+                r = self._by_slot[slot]
+                contexts.append(np.concatenate(
+                    [np.asarray(r.prompt, np.int64),
+                     np.asarray(r.generated, np.int64)]))
+            proposals = self.drafter.propose(contexts, k)
+            toks = np.zeros((self.capacity, Q), np.int32)
+            n_new = np.zeros(self.capacity, np.int32)
+            drafts: Dict[int, np.ndarray] = {}
+            for i, slot in enumerate(active):
+                r = self._by_slot[slot]
+                # draft budget: never past the KV capacity or the request's
+                # remaining token budget (wasted verification positions)
+                budget = min(k, self.cache_len - 1 - int(pos_np[slot]),
+                             r.max_new_tokens - r.n_generated - 1)
+                d = np.asarray(proposals[i], np.int64)[: max(budget, 0)]
+                drafts[slot] = d
+                toks[slot, 0] = self.next_tok[slot, 0]
+                if len(d):
+                    toks[slot, 1: 1 + len(d)] = d
+                n_new[slot] = 1 + len(d)
 
         if self.kv_layout == "paged":
             table, lengths, cow_src, cow_dst = self._paged_batch_inputs(
                 active, n_new)
-            vtok, self.blocks = verify_fn(
-                self.params, self.blocks, jnp.asarray(toks),
-                jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                jnp.asarray(lengths), jnp.asarray(cow_src),
-                jnp.asarray(cow_dst))
+
+            def launch():
+                vtok, self.blocks = verify_fn(
+                    self.params, self.blocks, jnp.asarray(toks),
+                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
+                    jnp.asarray(lengths), jnp.asarray(cow_src),
+                    jnp.asarray(cow_dst))
+                return vtok
         else:
-            vtok, self.blocks, self.k_pos = verify_fn(
-                self.params, self.blocks, self.k_pos, jnp.asarray(toks),
-                jnp.asarray(pos_np, jnp.int32), jnp.asarray(n_new))
-        vtok = np.asarray(jax.block_until_ready(vtok))
-        t_step = time.perf_counter() - t0
-        sched.end_iteration()
+            def launch():
+                vtok, self.blocks, self.k_pos = verify_fn(
+                    self.params, self.blocks, self.k_pos, jnp.asarray(toks),
+                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(n_new))
+                return vtok
+        vtok, t_step = self._timed_step(launch, label="verify.dispatch",
+                                        t0=t0)
 
         now = self._now()
         emitted = drafted = accepted = 0
-        for slot in active:
-            req = self._by_slot[slot]
-            d = drafts[slot]
-            m = greedy_accept(d, vtok[slot])
-            drafted += len(d)
-            accepted += m
-            for j in range(m + 1):
-                tok = int(vtok[slot, j])
-                req.generated.append(tok)
-                self.next_tok[slot, 0] = tok
-                sched.pool.pos[slot] += 1
-                emitted += 1
+        with self.tracer.span("rollback", n=len(active)):
+            for slot in active:
+                req = self._by_slot[slot]
+                d = drafts[slot]
+                m = greedy_accept(d, vtok[slot])
+                drafted += len(d)
+                accepted += m
+                for j in range(m + 1):
+                    tok = int(vtok[slot, j])
+                    req.generated.append(tok)
+                    self.next_tok[slot, 0] = tok
+                    sched.pool.pos[slot] += 1
+                    emitted += 1
+                    if req.done():
+                        break
                 if req.done():
-                    break
-            if req.done():
-                del self._by_slot[slot]
-                self._release(req, now)
-            elif self.mem is not None:
-                # rollback: pages allocated solely for rejected drafts
-                self.mem.trim(slot, int(sched.pool.pos[slot]))
+                    del self._by_slot[slot]
+                    self._release(req, now)
+                elif self.mem is not None:
+                    # rollback: pages allocated solely for rejected drafts
+                    self.mem.trim(slot, int(sched.pool.pos[slot]))
         return (emitted, t_step, drafted, accepted,
                 getattr(self.drafter, "dispatches_per_propose", 0))
 
@@ -978,6 +1070,30 @@ class ServeEngine:
             for slot in full:
                 self._release(self._by_slot.pop(slot), now)
 
+    def _timed_step(self, launch: Callable[[], Any], *, label: str,
+                    t0: Optional[float] = None) -> Tuple[np.ndarray, float]:
+        """One solver-phase step, shared by the plain-decode and spec-verify
+        paths: run the jitted dispatch (async) under a `label` span, then
+        block on BOTH the token output and the updated KV pool under a
+        ``device_wait`` span before stamping the step time.  Per-tick decode
+        timings (and the tokens/s and decode-p50 numbers derived from them)
+        therefore measure completed device work rather than XLA enqueue, and
+        the wait is attributed as device time on `label`'s track instead of
+        being blamed on whichever host phase touches the arrays next.
+        Closes the scheduler iteration."""
+        if t0 is None:
+            t0 = time.perf_counter()
+        with self.tracer.span(label):
+            out = launch()
+        with self.tracer.span("device_wait", cat="device",
+                              track=Tracer.default_track(label)):
+            # k_pos is None in the paged layout: an empty pytree, ignored
+            jax.block_until_ready((out, self.blocks, self.k_pos))
+        toks = np.asarray(out)
+        t_step = time.perf_counter() - t0
+        self.scheduler.end_iteration()
+        return toks, t_step
+
     def tick(self) -> TickRecord:
         if self.suspended:
             raise RuntimeError("ServeEngine is suspended; call resume() "
@@ -985,28 +1101,32 @@ class ServeEngine:
         now = self._now()
         sched = self.scheduler
         kv0 = self._kv_prev
+        trc = self.tracer
+        tick_t0 = time.perf_counter() if trc.enabled else 0.0
 
         # ---- scheduler phase: policies may rescale/rebalance the pool ----
-        stats: Dict = dict(self._last_stats)
-        k_before = sched.n_workers
-        # only policies can rescale inside between_ticks; skip the per-slot
-        # worker snapshot on the hot path when none are installed
-        live, before = (self._slot_workers() if sched.policies
-                        else ([], {}))
-        sched.between_ticks(stats)
-        if sched.n_workers != k_before:
-            self.metrics.scale_events.append(
-                (self._tick, k_before, sched.n_workers))
-            # policies resized the assignment in between_ticks, so resize()
-            # below only re-meshes; record the slot moves they caused here
-            self._record_resize_moves(sched.n_workers, live, before)
-            self.resize(sched.n_workers)
+        with trc.span("schedule", k=sched.n_workers):
+            stats: Dict = dict(self._last_stats)
+            k_before = sched.n_workers
+            # only policies can rescale inside between_ticks; skip the
+            # per-slot worker snapshot on the hot path when none installed
+            live, before = (self._slot_workers() if sched.policies
+                            else ([], {}))
+            sched.between_ticks(stats)
+            if sched.n_workers != k_before:
+                self.metrics.scale_events.append(
+                    (self._tick, k_before, sched.n_workers))
+                # policies resized the assignment in between_ticks, so
+                # resize() below only re-meshes; record the slot moves here
+                self._record_resize_moves(sched.n_workers, live, before)
+                self.resize(sched.n_workers)
         # priority admission: a full pool no longer blocks a high-priority
         # request — a strictly lower-priority in-flight decode is parked
         # (pages to host), not just queued behind
-        admitted = sched.admit(
-            now, preempt=self._preempt_for if (self.mem is not None
-                                               and self.evict) else None)
+        with trc.span("admit"):
+            admitted = sched.admit(
+                now, preempt=self._preempt_for if (self.mem is not None
+                                                   and self.evict) else None)
         admission_bytes = self._do_prefill(admitted) if admitted else 0
         n_chunks = 0
         n_chunk_dispatch = 0
@@ -1028,24 +1148,31 @@ class ServeEngine:
                  draft_disp) = self._spec_decode(active, verify_fn)
             else:
                 pos_np = sched.pool.pos
+                # t0 BEFORE the COW/table planning so decode_s keeps its
+                # historical meaning (plan + dispatch + device completion)
                 t0 = time.perf_counter()
                 if self.kv_layout == "paged":
                     table, lengths, cow_src, cow_dst = \
                         self._paged_batch_inputs(
                             active, np.ones(self.capacity, np.int32))
-                    nxt, self.blocks = decode_fn(
-                        self.params, self.blocks, jnp.asarray(self.next_tok),
-                        jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                        jnp.asarray(lengths), jnp.asarray(cow_src),
-                        jnp.asarray(cow_dst))
+
+                    def launch():
+                        nxt, self.blocks = decode_fn(
+                            self.params, self.blocks,
+                            jnp.asarray(self.next_tok),
+                            jnp.asarray(pos_np, jnp.int32),
+                            jnp.asarray(table), jnp.asarray(lengths),
+                            jnp.asarray(cow_src), jnp.asarray(cow_dst))
+                        return nxt
                 else:
-                    nxt, self.blocks, self.k_pos = decode_fn(
-                        self.params, self.blocks, self.k_pos,
-                        jnp.asarray(self.next_tok),
-                        jnp.asarray(pos_np, jnp.int32))
-                nxt = np.asarray(jax.block_until_ready(nxt))
-                t_step = time.perf_counter() - t0
-                sched.end_iteration()
+                    def launch():
+                        nxt, self.blocks, self.k_pos = decode_fn(
+                            self.params, self.blocks, self.k_pos,
+                            jnp.asarray(self.next_tok),
+                            jnp.asarray(pos_np, jnp.int32))
+                        return nxt
+                nxt, t_step = self._timed_step(
+                    launch, label="decode.dispatch", t0=t0)
 
                 now = self._now()
                 for slot in active:
@@ -1059,6 +1186,12 @@ class ServeEngine:
                         self._release(req, now)
         else:
             sched.sim_time += 1.0  # idle ticks still advance schedule time
+            if admitted or n_chunks:
+                # prefill-only tick: settle the outstanding KV scatters so
+                # wall-clock metrics charge the work to the tick that
+                # issued it (the decode path settles via _timed_step)
+                with trc.span("device_wait", cat="device", track="prefill"):
+                    jax.block_until_ready(self.blocks)
 
         if self.debug_checks:
             # page-leak guard: every live slot must hold EXACTLY the pages
@@ -1115,6 +1248,12 @@ class ServeEngine:
                          spec_drafted=drafted, spec_accepted=accepted,
                          draft_dispatches=draft_disp, **kv)
         self.metrics.ticks.append(rec)
+        if trc.enabled:
+            trc.count("serve.ticks")
+            trc.count("serve.tokens_emitted", emitted)
+            trc.observe("serve.tick_s", time.perf_counter() - tick_t0)
+            if active:
+                trc.observe("serve.decode_s", t_step)
         self._tick += 1
         return rec
 

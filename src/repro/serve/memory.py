@@ -33,6 +33,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import NULL_TRACER, Tracer
 from .pages import PageAllocator, PageError
 
 # chain-hash seed for the page-boundary prefix index
@@ -77,9 +78,11 @@ class KVMemoryManager:
     """Refcounted page pool + prefix index + parked-sequence store."""
 
     def __init__(self, n_pages: int, page_size: int, *,
-                 prefix_share: bool = True):
+                 prefix_share: bool = True,
+                 tracer: Optional[Tracer] = None):
         self.pages = PageAllocator(n_pages, page_size)
         self.prefix_share = prefix_share
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # full-page prefix index: chain hash of prompt tokens up to a page
         # boundary -> the physical page holding that page of tokens
         self._index: Dict[int, int] = {}
@@ -174,6 +177,8 @@ class KVMemoryManager:
             self.pages.share(slot, shared)
             self.shared_page_hits += len(shared)
             self.shared_token_hits += min(covered, L)
+            self.tracer.count("serve.prefix_hits")
+            self.tracer.count("serve.prefix_hit_pages", len(shared))
         fresh = self.pages.ensure(slot, L) if grow else []
         table = self.pages.table(slot)
         write = set(fresh)
@@ -253,6 +258,9 @@ class KVMemoryManager:
             return None
         old, new = self.pages.cow(slot, j)
         self.cow_breaks += 1
+        self.tracer.instant("cow_break", track="cow_plan", slot=slot,
+                            old=old, new=new)
+        self.tracer.count("serve.cow_breaks")
         return old, new
 
     def _invalidate_claims(self, pg: int, off: int) -> None:
@@ -298,6 +306,7 @@ class KVMemoryManager:
         self._drop_index_entries(freed)
         self.parked_total += 1
         self.park_bytes += nbytes
+        self.tracer.count("serve.park_bytes", nbytes)
         return seq
 
     def has_parked(self, rid: int) -> bool:
@@ -311,6 +320,7 @@ class KVMemoryManager:
         table = self.pages.alloc_slot(slot, seq.live_tokens)
         self.restored_total += 1
         self.restore_bytes += seq.nbytes
+        self.tracer.count("serve.restore_bytes", seq.nbytes)
         return seq, table
 
     @property

@@ -19,6 +19,7 @@ import numpy as np
 from ..core.chunks import Assignment, ChunkStore
 from ..core.fairshare import stride_pick
 from ..core.policies import Policy
+from ..obs import NULL_TRACER, Tracer
 from .request import Request, RequestState
 from .slots import SlotPool
 
@@ -37,7 +38,9 @@ class SlotScheduler:
                  seed: int = 0,
                  tenant_weights: Optional[Dict[str, float]] = None,
                  on_worker_added: Optional[Callable[[int], None]] = None,
-                 on_worker_removed: Optional[Callable[[int], None]] = None):
+                 on_worker_removed: Optional[Callable[[int], None]] = None,
+                 tracer: Optional[Tracer] = None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.pool = SlotPool(capacity)
         # slot ids ARE the chunk store's samples: chunk c owns slots
         # [c*spc, (c+1)*spc) and moves between workers as one unit.
@@ -181,6 +184,7 @@ class SlotScheduler:
                 # pop(0) here would re-admit the victim we just parked
                 q = self._queues[tenant]
                 q.pop(next(i for i, r in enumerate(q) if r is req))
+                self.tracer.count("serve.preempt_admits")
             if not self._queues[tenant]:
                 del self._queues[tenant]
             self._admitted[tenant] = self._admitted.get(tenant, 0.0) + 1.0
@@ -200,9 +204,14 @@ class SlotScheduler:
 
     def between_ticks(self, stats: Dict) -> None:
         """Run the attached policies (scheduler phase; may resize/rebalance
-        the slot-chunk assignment through the ownership-checked mutators)."""
+        the slot-chunk assignment through the ownership-checked mutators).
+        Per-policy spans nest inside the engine's ``schedule`` span on the
+        same track — detail rows in the trace viewer, no double-counting in
+        the attribution report (it sums outermost spans per track)."""
         for p in self.policies:
-            p.between_iterations(self, stats)
+            with self.tracer.span("schedule.policy", track="schedule",
+                                  policy=type(p).__name__):
+                p.between_iterations(self, stats)
 
     def set_workers(self, k: int) -> None:
         """Explicit elastic resize of the logical worker pool."""

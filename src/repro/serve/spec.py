@@ -170,7 +170,10 @@ class DraftModelDrafter:
 
             return jax.jit(propose)
 
-        return _lru_get(self._fns, (nb, L, k), build, self.max_cached_fns)
+        # the engine stamps .tracer after construction; standalone drafters
+        # fall back to the untraced default
+        return _lru_get(self._fns, (nb, L, k), build, self.max_cached_fns,
+                        getattr(self, "tracer", None), "draft")
 
     def propose(self, contexts: Sequence[np.ndarray],
                 k: int) -> List[np.ndarray]:
