@@ -1,0 +1,60 @@
+"""Disaggregated serving example: prefill and decode pools over disjoint
+worker subsets with a page-granular handoff between them, plus a
+queue-driven split policy rebalancing the prefill:decode worker split
+mid-run.  The token streams are asserted bit-identical to a monolithic
+flat-KV run of the same workload — the handoff moves KV pages, never
+recomputes them.
+
+    PYTHONPATH=src python examples/disagg_serve.py [--fast]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.serve import (DisaggEngine, QueueSplitPolicy, ServeEngine,
+                         poisson_arrivals, synthetic_requests)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config("smollm-360m"))
+    n = 8 if args.fast else 14
+
+    def workload(seed=0):
+        rng = np.random.default_rng(seed)
+        return synthetic_requests(
+            n, vocab_size=cfg.vocab_size,
+            arrivals=poisson_arrivals(n, rate=25.0, rng=rng),
+            prompt_len=(8, 28), max_new_tokens=(4, 10), rng=rng)
+
+    kw = dict(capacity=6, cache_len=48, prefill_bucket=8, seed=0)
+
+    # monolithic flat engine: the bit-exactness oracle
+    oracle = ServeEngine(cfg, kv_layout="flat", n_workers=2, **kw)
+    want = {r.rid: list(r.generated) for r in oracle.run(workload()).requests}
+
+    # disaggregated: requests prefill in one pool, decode in the other;
+    # the split policy moves workers toward whichever queue is deeper
+    dis = DisaggEngine(cfg, n_workers=2,
+                       split_policy=QueueSplitPolicy(interval=3),
+                       debug_checks=True, **kw)
+    metrics = dis.run(workload())
+    got = {r.rid: list(r.generated) for r in metrics.requests}
+
+    s = metrics.summarize()
+    d = s["disagg"]
+    print(f"finished {s['requests_finished']}/{s['requests_total']} "
+          f"requests, {s['tokens_per_s']:.1f} tok/s, "
+          f"TTFT p50 {s['ttft_p50_s']*1e3:.0f}ms")
+    print(f"handoffs: {d['handoffs']} ({d['handoff_bytes']} KV bytes "
+          f"prefill->decode, delay p50 "
+          f"{(s['handoff_delay_p50_s'] or 0)*1e3:.1f}ms)")
+    print(f"split events (tick, prefill_k, decode_k): {d['split_events']}")
+
+    assert got == want, "disagg streams must match the monolithic oracle"
+    assert d["handoffs"] == s["requests_finished"]
+    assert dis.prefill.pages.n_used == 0 and dis.decode.pages.n_used == 0
+    print("disaggregated serving OK (streams bit-identical to monolithic)")

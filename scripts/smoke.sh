@@ -27,6 +27,14 @@ python -m repro.kernels.paged_attention --selftest
 echo "== KV memory manager invariants (refcount/COW/park fuzz) =="
 python -m repro.serve.memory --selftest
 
+echo "== disagg traced serve (prefill/decode pools + handoff spans) =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 10 --disagg --workers 2 --trace-out /tmp/disagg_trace.json \
+    --seed 0
+python -m repro.obs.trace --validate /tmp/disagg_trace.json \
+    --require schedule,prefill.dispatch,decode.dispatch,handoff.extract,handoff.inject \
+    --require-tracks prefill_pool.prefill,decode_pool.decode,handoff
+
 echo "== paged-vs-flat serve A/B (dry run) =="
 python benchmarks/serve_bench.py --ab --dry-run
 
@@ -35,6 +43,9 @@ python benchmarks/serve_bench.py --spec --dry-run
 
 echo "== prefix-sharing on/off A/B (dry run) =="
 python benchmarks/serve_bench.py --share --dry-run
+
+echo "== disagg-vs-monolithic serve A/B (dry run) =="
+python benchmarks/serve_bench.py --disagg --dry-run
 
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast

@@ -21,15 +21,16 @@ projection, `UniTaskEngine` + callable `ElasticScalingPolicy`, and
                    (makespan, utilization, Jain fairness, preemptions)
 """
 from .allocator import FairShareAllocator, JobDemand, UsageLedger
-from .jobs import (ClusterJob, JobSpec, JobState, LMTrainJob, ServeJob,
-                   TrainJob, cocoa_train_job)
+from .jobs import (ClusterJob, DisaggServeJob, JobSpec, JobState, LMTrainJob,
+                   ServeJob, TrainJob, cocoa_train_job)
 from .orchestrator import ClusterOrchestrator, ClusterReport, TickStats
 from .pool import DevicePool
 from .trace import ClusterTrace, TraceEvent, arrive, burst, depart
 
 __all__ = [
     "ClusterJob", "ClusterOrchestrator", "ClusterReport", "ClusterTrace",
-    "DevicePool", "FairShareAllocator", "JobDemand", "JobSpec", "JobState",
-    "LMTrainJob", "ServeJob", "TickStats", "TraceEvent", "TrainJob",
-    "UsageLedger", "arrive", "burst", "cocoa_train_job", "depart",
+    "DevicePool", "DisaggServeJob", "FairShareAllocator", "JobDemand",
+    "JobSpec", "JobState", "LMTrainJob", "ServeJob", "TickStats",
+    "TraceEvent", "TrainJob", "UsageLedger", "arrive", "burst",
+    "cocoa_train_job", "depart",
 ]

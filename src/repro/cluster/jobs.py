@@ -25,6 +25,10 @@ a scheduler-phase decision, never a restart):
   suspend/resume (scale-to-zero) hooks.  Modeled throughput scales
   linearly: a lease of n nodes runs `n * ticks_per_dt` engine ticks per
   simulated second.
+- `DisaggServeJob`: wraps `serve.DisaggEngine` — the allocator sizes the
+  prefill + decode pools as one job and the engine's split policy divides
+  the lease internally; the page-granular handoff bytes land in the same
+  `kv_moved_bytes` ledger as preemption parks.
 """
 from __future__ import annotations
 
@@ -41,6 +45,7 @@ from ..core.cocoa import CoCoASolver
 from ..core.engine import IterationRecord, MicroTaskEmulator, UniTaskEngine
 from ..core.policies import ElasticScalingPolicy
 from ..data.synthetic import make_svm_data
+from ..serve.disagg import DisaggEngine, SplitPolicy
 from ..serve.engine import ServeEngine
 from ..serve.request import Request, poisson_arrivals, synthetic_requests
 
@@ -466,6 +471,113 @@ class ServeJob(ClusterJob):
         if m.wall_s == 0.0:  # mid-run snapshot: derive, don't mutate
             m = dataclasses.replace(m, wall_s=self.service_time())
         s.update({"serve": m.summarize(),
+                  "expected_requests": self.expected_requests,
+                  "kv_moved_bytes": self.kv_moved_bytes})
+        return s
+
+
+class DisaggServeJob(ServeJob):
+    """Disaggregated serving job: the fair-share allocator sizes the
+    prefill + decode pools as ONE job, and the engine's `SplitPolicy`
+    divides the lease internally.  A lease change maps to
+    `DisaggEngine.resize(total)` (ratio-preserving), scale-to-zero
+    suspends both halves, and a shrink parks excess DECODE slots (prefill
+    slots drain through the handoff within a tick).  Subclasses `ServeJob`
+    so the orchestrator's serve-specific paths (burst routing, arrival
+    horizons) apply unchanged."""
+
+    def __init__(self, spec: JobSpec, cfg, *, capacity: int = 8,
+                 cache_len: int = 48, prefill_bucket: int = 8,
+                 slots_per_node: int = 2, ticks_per_dt: float = 2.0,
+                 max_admit_per_tick: int = 4,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 page_size: int = 8,
+                 prefix_share: Optional[bool] = None,
+                 evict: Optional[bool] = None,
+                 prefill_workers: Optional[int] = None,
+                 split_policy: Optional["SplitPolicy"] = None,
+                 spec_mode: str = "off", spec_k: int = 4,
+                 seed: int = 0, tracer=None):
+        ClusterJob.__init__(self, spec)
+        self._sim_now = 0.0
+        self.slots_per_node = slots_per_node
+        self.ticks_per_dt = ticks_per_dt
+        self.engine = DisaggEngine(
+            cfg, capacity=capacity, cache_len=cache_len,
+            prefill_bucket=prefill_bucket, n_workers=1,
+            prefill_workers=prefill_workers, split_policy=split_policy,
+            max_admit_per_tick=max_admit_per_tick,
+            tenant_weights=tenant_weights, seed=seed,
+            page_size=page_size, prefix_share=prefix_share, evict=evict,
+            spec=spec_mode, spec_k=spec_k,
+            clock=lambda: self._sim_now, tracer=tracer)
+        self._rid = 0
+        self.expected_requests = 0
+        self.no_more_arrivals = False
+
+    @property
+    def kv_moved_bytes(self) -> int:
+        """Both halves' ledgers: handoff parks land on the prefill side,
+        handoff restores (plus any lease-shrink parks) on the decode side."""
+        total = 0
+        for half in (self.engine.prefill, self.engine.decode):
+            if half.mem is not None:
+                s = half.mem.stats()
+                total += int(s["park_bytes"] + s["restore_bytes"])
+        return total
+
+    # --- scheduling -------------------------------------------------------
+    def backlog(self, now: float) -> int:
+        eng = self.engine
+        return (eng.n_active_slots
+                + eng.prefill.scheduler.n_arrived(now)
+                + eng.decode.scheduler.n_arrived(now))
+
+    def on_allocation(self, nodes: Sequence[int], psts: Sequence[float],
+                      now: float) -> None:
+        prev = len(self.nodes)
+        ClusterJob.on_allocation(self, nodes, psts, now)
+        if not self.active:
+            return
+        eng = self.engine
+        if not nodes:
+            eng.suspend()  # scale-to-zero: KV, queues, handoff kept intact
+        else:
+            eng.resume()
+            if eng.decode.evict:
+                allowed = max(1, len(nodes) * self.slots_per_node)
+                eng.decode.scheduler.active_cap = allowed
+                over = eng.n_active_slots - allowed
+                if len(nodes) < prev and over > 0:
+                    eng.park_excess(over)
+            if eng.total_workers != len(nodes):
+                eng.resize(len(nodes))
+
+    def advance(self, dt: float, now: float) -> None:
+        if not self.active:
+            return
+        if not self.nodes:
+            self._sim_now = now + dt  # time passes while parked
+            return
+        nticks = max(1, int(round(len(self.nodes) * self.ticks_per_dt * dt)))
+        for i in range(1, nticks + 1):
+            self._sim_now = now + dt * i / nticks
+            self.engine.tick()  # enters each half's mesh internally
+
+    def drained(self) -> bool:
+        return self.engine.drained
+
+    def maybe_finish(self, now: float) -> None:
+        if self.active and self.no_more_arrivals and self.drained():
+            self.state = JobState.FINISHED
+            self.finish_time = now
+            self.engine.finalize(self.service_time())
+
+    def summary(self) -> Dict[str, Any]:
+        s = ClusterJob.summary(self)
+        m = self.engine.metrics
+        wall = m.wall_s if m.wall_s else self.service_time()
+        s.update({"serve": m.summarize(wall_s=wall),
                   "expected_requests": self.expected_requests,
                   "kv_moved_bytes": self.kv_moved_bytes})
         return s

@@ -21,7 +21,8 @@ from ..configs import get_config, smoke_variant
 from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
 from ..obs import Tracer, dominant_host_phase, format_attribution, \
     phase_attribution
-from ..serve import ServeEngine, poisson_arrivals, synthetic_requests
+from ..serve import (DisaggEngine, QueueSplitPolicy, ServeEngine,
+                     poisson_arrivals, synthetic_requests)
 from .train import scale_config
 
 
@@ -72,6 +73,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           straggler_policy: bool = False, kv_layout: str = "flat",
           page_size: int = 8, spec: str = "off", spec_k: int = 4,
           prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
+          disagg: bool = False, prefill_workers: Optional[int] = None,
+          split_interval: int = 4,
           seed: int = 0, trace_out: Optional[str] = None) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary.
     `trace_out` enables tick-phase tracing and writes a Chrome trace-event
@@ -96,12 +99,24 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
         policies.append(StragglerMitigationPolicy())
 
     tracer = Tracer(name=f"serve:{arch}") if trace_out else None
-    engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
-                         prefill_bucket=prefill_bucket, n_workers=workers,
-                         policies=policies, kv_layout=kv_layout,
-                         page_size=page_size, spec=spec, spec_k=spec_k,
-                         prefix_share=prefix_share, evict=evict,
-                         seed=seed, tracer=tracer)
+    if disagg:
+        # disagg is paged-only and splits the pool itself: the scale-event
+        # schedule / policies (ServeEngine-internal elasticity) don't apply
+        engine = DisaggEngine(
+            cfg, capacity=capacity, cache_len=cache_len,
+            prefill_bucket=prefill_bucket, n_workers=workers,
+            prefill_workers=prefill_workers,
+            split_policy=QueueSplitPolicy(interval=split_interval),
+            page_size=page_size, spec=spec, spec_k=spec_k,
+            prefix_share=prefix_share, evict=evict,
+            seed=seed, tracer=tracer)
+    else:
+        engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
+                             prefill_bucket=prefill_bucket, n_workers=workers,
+                             policies=policies, kv_layout=kv_layout,
+                             page_size=page_size, spec=spec, spec_k=spec_k,
+                             prefix_share=prefix_share, evict=evict,
+                             seed=seed, tracer=tracer)
     metrics = engine.run(reqs)
     out = metrics.summarize()
     out["arch"] = arch
@@ -158,6 +173,17 @@ def main() -> None:
                          "in-flight decode's pages to host instead of "
                          "queueing (paged layout only; default: on when "
                          "--kv-layout paged)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: prefill + decode pools over "
+                         "disjoint worker subsets with a page-granular "
+                         "handoff (paged layout implied; --scale-events "
+                         "do not apply — the split policy rebalances)")
+    ap.add_argument("--prefill-workers", type=int, default=None,
+                    help="initial prefill-pool worker count (disagg; "
+                         "default: half of --workers)")
+    ap.add_argument("--split-interval", type=int, default=4,
+                    help="ticks between split-policy rebalance decisions "
+                         "(disagg)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="enable tick-phase tracing and write a Chrome "
@@ -178,7 +204,9 @@ def main() -> None:
                 kv_layout=args.kv_layout, page_size=args.page_size,
                 spec=args.spec, spec_k=args.spec_k,
                 prefix_share=onoff(args.prefix_share),
-                evict=onoff(args.evict), seed=args.seed,
+                evict=onoff(args.evict), disagg=args.disagg,
+                prefill_workers=args.prefill_workers,
+                split_interval=args.split_interval, seed=args.seed,
                 trace_out=args.trace_out)
     if args.json:
         print(json.dumps(out, indent=2))
@@ -202,6 +230,11 @@ def main() -> None:
               f"{out['cow_breaks_total']} cow breaks, "
               f"{out['parked_total']} parked / {out['restored_total']} "
               f"restored ({out['kv_moved_bytes_total']} bytes moved)")
+    if "disagg" in out:
+        d = out["disagg"]
+        print(f"  disagg: {d['handoffs']} handoffs "
+              f"({d['handoff_bytes']} bytes), splits "
+              f"{d['split_events']}")
     if "attribution" in out:
         print(f"  trace written to {out['trace_out']}; tick-time "
               f"attribution (dominant host phase: "

@@ -19,12 +19,12 @@ The serving engine, cluster orchestrator, and benchmarks all thread a
 """
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, percentile
 from .report import dominant_host_phase, format_attribution, phase_attribution
-from .trace import (NOOP_SPAN, NULL_TRACER, TraceEvent, Tracer,
+from .trace import (NOOP_SPAN, NULL_TRACER, ScopedTracer, TraceEvent, Tracer,
                     validate_chrome_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NOOP_SPAN",
-    "NULL_TRACER", "TraceEvent", "Tracer", "dominant_host_phase",
-    "format_attribution", "percentile", "phase_attribution",
-    "validate_chrome_trace",
+    "NULL_TRACER", "ScopedTracer", "TraceEvent", "Tracer",
+    "dominant_host_phase", "format_attribution", "percentile",
+    "phase_attribution", "validate_chrome_trace",
 ]

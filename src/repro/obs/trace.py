@@ -211,22 +211,89 @@ class Tracer:
         return path
 
 
+class ScopedTracer(Tracer):
+    """A scoped view over a parent tracer: spans and instants keep their
+    NAMES but land on ``<scope>.<track>`` tracks, and metric names gain the
+    same ``<scope>.`` prefix.  Events share the parent's list, clock, epoch,
+    nesting depth, and registry, so one export interleaves every scope on
+    distinguishable rows — this is how the disaggregated serving engine
+    gives its prefill and decode halves separate per-pool tracks (and
+    non-colliding ``serve.*`` metrics) on ONE trace."""
+
+    def __init__(self, parent: Tracer, scope: str):
+        # deliberately skip Tracer.__init__: all storage belongs to `parent`
+        self.parent = parent
+        self.scope = scope
+        self.enabled = parent.enabled
+        self.name = parent.name
+        self.registry = parent.registry
+        self._clock = parent._clock
+
+    # shared mutable state lives on the parent (clear() resets epoch there)
+    @property
+    def events(self) -> List[TraceEvent]:
+        return self.parent.events
+
+    @property
+    def _epoch(self) -> float:
+        return self.parent._epoch
+
+    @property
+    def _depth(self) -> int:
+        return self.parent._depth
+
+    @_depth.setter
+    def _depth(self, v: int) -> None:
+        self.parent._depth = v
+
+    def span(self, name: str, cat: str = "host",
+             track: Optional[str] = None, **args):
+        if not self.enabled:
+            return NOOP_SPAN
+        base = track if track is not None else self.default_track(name)
+        return _Span(self, name, cat, f"{self.scope}.{base}", args)
+
+    def instant(self, name: str, track: Optional[str] = None,
+                **args) -> None:
+        if not self.enabled:
+            return
+        base = track if track is not None else self.default_track(name)
+        self.parent.instant(name, track=f"{self.scope}.{base}", **args)
+
+    def count(self, name: str, n=1) -> None:
+        if self.enabled:
+            self.registry.counter(f"{self.scope}.{name}").inc(n)
+
+    def gauge(self, name: str, v) -> None:
+        if self.enabled:
+            self.registry.gauge(f"{self.scope}.{name}").set(v)
+
+    def observe(self, name: str, v) -> None:
+        if self.enabled:
+            self.registry.histogram(f"{self.scope}.{name}").observe(v)
+
+
 #: Shared disabled tracer: the default for every instrumented component, so
 #: "no tracer configured" and "tracing off" are the same zero-cost path.
 NULL_TRACER = Tracer(enabled=False, name="null")
 
 
 def validate_chrome_trace(obj: Any,
-                          require_names: Sequence[str] = ()) -> Dict[str, int]:
+                          require_names: Sequence[str] = (),
+                          require_tracks: Sequence[str] = ()
+                          ) -> Dict[str, int]:
     """Validate an exported object against the Chrome trace-event format's
     required keys (name/ph/ts/pid/tid, plus dur for complete events); then
-    check every name in `require_names` occurs at least once.  Returns
-    per-name occurrence counts; raises ValueError on any violation."""
+    check every name in `require_names` occurs at least once and every
+    track in `require_tracks` appears as a thread_name metadata row (the
+    per-pool tracks a `ScopedTracer` emits).  Returns per-name occurrence
+    counts; raises ValueError on any violation."""
     if not isinstance(obj, dict) or not isinstance(obj.get("traceEvents"),
                                                    list):
         raise ValueError("not a Chrome trace: expected a dict with a "
                          "'traceEvents' list")
     counts: Dict[str, int] = {}
+    tracks: Dict[str, None] = {}
     for i, ev in enumerate(obj["traceEvents"]):
         if not isinstance(ev, dict):
             raise ValueError(f"traceEvents[{i}] is not an object")
@@ -237,10 +304,16 @@ def validate_chrome_trace(obj: Any,
         if ev["ph"] == "X" and "dur" not in ev:
             raise ValueError(f"traceEvents[{i}]: complete ('X') event "
                              f"missing 'dur'")
+        if ev["ph"] == "M" and ev["name"] == "thread_name":
+            tracks.setdefault(str(ev.get("args", {}).get("name", "")))
         counts[ev["name"]] = counts.get(ev["name"], 0) + 1
     missing = [n for n in require_names if not counts.get(n)]
     if missing:
         raise ValueError(f"trace has no event named: {missing}")
+    missing_tracks = [t for t in require_tracks if t not in tracks]
+    if missing_tracks:
+        raise ValueError(f"trace has no track named: {missing_tracks} "
+                         f"(tracks present: {sorted(tracks)})")
     return counts
 
 
@@ -252,11 +325,16 @@ def _cli() -> None:
     ap.add_argument("--validate", required=True, metavar="FILE")
     ap.add_argument("--require", default="",
                     help="comma-separated event names that must be present")
+    ap.add_argument("--require-tracks", default="",
+                    help="comma-separated track (thread) names that must "
+                         "be present")
     args = ap.parse_args()
     with open(args.validate) as fh:
         obj = json.load(fh)
     names = [n for n in args.require.split(",") if n]
-    counts = validate_chrome_trace(obj, require_names=names)
+    tracks = [t for t in args.require_tracks.split(",") if t]
+    counts = validate_chrome_trace(obj, require_names=names,
+                                   require_tracks=tracks)
     total = sum(counts.values())
     print(f"{args.validate}: valid Chrome trace, {total} events, "
           f"{len(counts)} distinct names")

@@ -32,9 +32,17 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 suspend/resume (cluster scale-to-zero), an injected
                 simulation clock, and records TTFT / per-token latency /
                 throughput / occupancy / page occupancy / admission bytes
+- `disagg`    — `DisaggEngine`: prefill and decode pools as two cooperating
+                engine halves over disjoint worker subsets with a
+                page-granular handoff queue (park on the prefill side,
+                adopt + restore on the decode side — bit-exact, zero
+                re-prefill) and a per-tick `SplitPolicy` rebalancing the
+                prefill:decode worker split from observed queue depths
 """
+from .disagg import (DisaggEngine, DisaggMetrics, QueueSplitPolicy,
+                     ScheduledSplitPolicy, SplitObs, SplitPolicy)
 from .engine import ServeEngine, ServeMetrics
-from .memory import KVMemoryManager, ParkedSeq
+from .memory import KVMemoryManager, ParkedSeq, RestorePlan
 from .pages import PageAllocator, PageError
 from .request import (Request, RequestState, poisson_arrivals,
                       synthetic_requests, trace_arrivals)
@@ -43,8 +51,10 @@ from .slots import SlotPool
 from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 __all__ = [
-    "DraftModelDrafter", "KVMemoryManager", "NgramDrafter", "PageAllocator",
-    "PageError", "ParkedSeq", "Request", "RequestState", "ServeEngine",
-    "ServeMetrics", "SlotPool", "SlotScheduler", "greedy_accept",
+    "DisaggEngine", "DisaggMetrics", "DraftModelDrafter", "KVMemoryManager",
+    "NgramDrafter", "PageAllocator", "PageError", "ParkedSeq",
+    "QueueSplitPolicy", "Request", "RequestState", "RestorePlan",
+    "ScheduledSplitPolicy", "ServeEngine", "ServeMetrics", "SlotPool",
+    "SlotScheduler", "SplitObs", "SplitPolicy", "greedy_accept",
     "poisson_arrivals", "synthetic_requests", "trace_arrivals",
 ]

@@ -1,0 +1,501 @@
+"""Disaggregated serving: a prefill pool and a decode pool as two
+cooperating `ServeEngine` halves over disjoint worker subsets.
+
+Monolithic continuous batching interleaves (chunked) prefill with decode
+in one tick loop, so a burst of long prompts steals decode ticks from
+in-flight streams — PR 6's attribution measured prefill as the dominant
+serialized host phase on the mixed workload, and it is why the paged arm
+wins decode p50 yet loses TTFT.  `DisaggEngine` kills that coupling at the
+root:
+
+- Requests are admitted to the **prefill pool** (a `ServeEngine` with
+  ``decode_enabled=False``): its ticks run admission + (chunked) prefill
+  only, and freshly prefilled slots wait for handoff instead of decoding.
+- After each prefill tick the engine **extracts** every prefilled slot:
+  `KVMemoryManager.park` gathers the slot's live pages to host in one
+  O(pages) device->host copy (the same primitive as eviction), the request
+  leaves the prefill pool, and (request, payload) enters the handoff queue.
+- The **decode pool** (a full `ServeEngine`, optionally speculative)
+  **injects** each handoff: the payload is adopted into its memory manager
+  and the request queued; admission then restores it with ONE scatter —
+  re-matching the prompt against the decode-side prefix index first, so a
+  handed-off few-shot stream regains its page dedup (restore re-sharing).
+  Zero re-prefill; the token stream is bit-identical to a monolithic run.
+
+The elastic twist (no production disagg stack has it): a `SplitPolicy`
+rebalances the prefill:decode worker split every few ticks from observed
+backlog tokens and per-pool tick times (fed by the `repro.obs` EMAs and
+mirrored to tracer gauges), reusing `resize(k)` on each half — Chicle's
+cheap-frequent-rebalance thesis applied across the phase boundary.  The
+cluster layer sizes both pools as ONE job (`DisaggServeJob`) whose lease
+the split policy divides internally.
+
+Tracing: each half gets a `ScopedTracer` ("prefill_pool." / "decode_pool."
+tracks), and the handoff itself emits ``handoff.extract`` /
+``handoff.inject`` spans on the shared parent tracer — one Chrome trace,
+three families of rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..compat import set_mesh
+from ..configs.base import ModelConfig
+from ..obs import NULL_TRACER, ScopedTracer, Tracer
+from .engine import ServeEngine, ServeMetrics
+from .memory import ParkedSeq
+from .pages import PageError
+from .request import Request
+
+
+# ---------------------------------------------------------------------------
+# Split policies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SplitObs:
+    """What a `SplitPolicy` sees each tick: queue depths in TOKENS (work,
+    not request counts), per-pool host tick-time EMAs, and the handoff
+    queue depth."""
+
+    total_workers: int
+    prefill_backlog_tokens: int
+    decode_backlog_tokens: int
+    prefill_tick_s: float
+    decode_tick_s: float
+    handoff_depth: int
+    tick: int
+
+
+class SplitPolicy:
+    """Decides the prefill pool's worker count each tick (the decode pool
+    gets the remainder).  The base policy never moves workers."""
+
+    def decide(self, obs: SplitObs, *, current: int) -> int:
+        return current
+
+
+class QueueSplitPolicy(SplitPolicy):
+    """Work-proportional split with hysteresis: every `interval` ticks,
+    weight each pool's backlog tokens by its observed per-tick host time
+    and move AT MOST one worker toward the proportional target — cheap,
+    frequent, minimal-churn rebalancing in the Chicle spirit (a worker
+    move costs a remesh on each half, so the policy damps churn rather
+    than chasing every queue wiggle)."""
+
+    def __init__(self, interval: int = 4, min_each: int = 1):
+        self.interval = max(1, int(interval))
+        self.min_each = max(1, int(min_each))
+
+    def decide(self, obs: SplitObs, *, current: int) -> int:
+        if obs.tick % self.interval != 0:
+            return current
+        # relative cost of a prefill-pool tick vs a decode-pool tick; the
+        # clamp keeps one noisy EMA sample from slamming the split
+        cost = 1.0
+        if obs.prefill_tick_s > 0 and obs.decode_tick_s > 0:
+            cost = min(max(obs.prefill_tick_s / obs.decode_tick_s, 0.25),
+                       4.0)
+        wp = obs.prefill_backlog_tokens * cost
+        wd = float(obs.decode_backlog_tokens + obs.handoff_depth)
+        if wp + wd <= 0:
+            return current
+        lo = self.min_each
+        hi = max(obs.total_workers - self.min_each, lo)
+        want = int(round(obs.total_workers * wp / (wp + wd)))
+        want = min(max(want, lo), hi)
+        if want > current:
+            return current + 1
+        if want < current:
+            return current - 1
+        return current
+
+
+class ScheduledSplitPolicy(SplitPolicy):
+    """Explicit (tick, prefill_workers) schedule — the disagg analogue of
+    `core.policies.ElasticScalingPolicy`, used by tests and demos to force
+    deterministic mid-run rebalances."""
+
+    def __init__(self, events: Sequence[Tuple[int, int]]):
+        self.events = sorted((int(t), int(k)) for t, k in events)
+
+    def decide(self, obs: SplitObs, *, current: int) -> int:
+        kp = current
+        for at, k in self.events:
+            if obs.tick >= at:
+                kp = k
+        return kp
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DisaggMetrics:
+    """Per-pool `ServeMetrics` plus handoff/split accounting.  `combined`
+    builds one ServeMetrics over both halves (each request counted once,
+    tick records concatenated) so the standard summary keys — TTFT, queue
+    delay, handoff delay, tokens/s — mean the same thing as monolithic."""
+
+    prefill: ServeMetrics
+    decode: ServeMetrics
+    handoffs: int = 0
+    handoff_bytes: int = 0
+    split_events: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)  # (tick, prefill_workers, decode_workers)
+    wall_s: float = 0.0
+
+    @property
+    def requests(self) -> List[Request]:
+        """Union of both halves' requests, each exactly once (a handed-off
+        request appears in both halves' lists; the objects are shared, so
+        either copy carries the full lifecycle)."""
+        seen: Dict[int, Request] = {}
+        for r in self.prefill.requests:
+            seen.setdefault(r.rid, r)
+        for r in self.decode.requests:
+            seen.setdefault(r.rid, r)
+        return list(seen.values())
+
+    def combined(self, wall_s: Optional[float] = None) -> ServeMetrics:
+        return ServeMetrics(requests=self.requests,
+                            ticks=self.prefill.ticks + self.decode.ticks,
+                            wall_s=self.wall_s if wall_s is None else wall_s)
+
+    def summarize(self, wall_s: Optional[float] = None) -> Dict[str, Any]:
+        w = self.wall_s if wall_s is None else wall_s
+        out = self.combined(w).summarize()
+        halves: Dict[str, Any] = {}
+        for name, m in (("prefill_pool", self.prefill),
+                        ("decode_pool", self.decode)):
+            mm = m if m.wall_s or not w else dataclasses.replace(m, wall_s=w)
+            halves[name] = mm.summarize()
+        out["disagg"] = {
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "split_events": [list(e) for e in self.split_events],
+            **halves,
+        }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class DisaggEngine:
+    """Prefill and decode pools over disjoint worker subsets with a
+    page-granular handoff queue between them.
+
+    One disagg tick = rebalance (maybe) -> prefill-pool tick -> extract
+    every prefilled slot (park to host, O(pages) each) -> inject into the
+    decode pool (adopt + queue) -> decode-pool tick (restores newly
+    injected requests through admission, then one solver step).  A request
+    handed off in tick t therefore emits its first decode token in tick
+    t+? only as decode slots free up — its prefill never stole a decode
+    tick, which is the whole point.
+
+    Worker counts are LOGICAL (as everywhere in this repo): with fewer
+    devices than workers both meshes land on the same devices; with
+    total_workers == 1 each half runs one logical worker."""
+
+    def __init__(self, cfg: ModelConfig, *, capacity: int = 8,
+                 cache_len: int = 64, prefill_bucket: int = 16,
+                 n_workers: int = 2, prefill_workers: Optional[int] = None,
+                 prefill_capacity: Optional[int] = None,
+                 split_policy: Optional[SplitPolicy] = None,
+                 page_size: int = 8, paged_impl: str = "xla",
+                 prefix_share: Optional[bool] = None,
+                 evict: Optional[bool] = None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None,
+                 spec: str = "off", spec_k: int = 4,
+                 drafter: Optional[Any] = None,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params: Optional[Any] = None,
+                 slots_per_chunk: int = 2, max_admit_per_tick: int = 4,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 seed: int = 0, params: Optional[Any] = None,
+                 clock: Optional[Any] = None,
+                 debug_checks: bool = False,
+                 tracer: Optional[Tracer] = None):
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.split_policy = split_policy
+        self.debug_checks = debug_checks
+        self.total_workers = max(1, int(n_workers))
+        kp = (int(prefill_workers) if prefill_workers is not None
+              else max(1, self.total_workers // 2))
+        kp = min(max(kp, 1), max(self.total_workers - 1, 1))
+        kd = max(self.total_workers - kp, 1)
+
+        # both halves share ONE clock so TTFT (stamped by the prefill half)
+        # and TPOT (decode half) land on the same timebase
+        self._clock_ext = clock
+        self._t0: Optional[float] = None
+
+        def scoped(scope: str) -> Optional[Tracer]:
+            if self.tracer.enabled:
+                return ScopedTracer(self.tracer, scope)
+            return None
+
+        self.prefill = ServeEngine(
+            cfg, capacity=(prefill_capacity if prefill_capacity is not None
+                           else capacity),
+            cache_len=cache_len, prefill_bucket=prefill_bucket,
+            n_workers=kp, slots_per_chunk=slots_per_chunk,
+            max_admit_per_tick=max_admit_per_tick, seed=seed, params=params,
+            tenant_weights=tenant_weights, clock=self._now,
+            kv_layout="paged", page_size=page_size,
+            chunked_prefill=chunked_prefill, prefill_chunk=prefill_chunk,
+            paged_impl=paged_impl, prefix_share=prefix_share,
+            # the prefill pool never decodes, so priority preemption there
+            # would only churn mid-prefill state — keep handoff the one
+            # park path on this half
+            evict=False, spec="off", decode_enabled=False,
+            debug_checks=debug_checks, tracer=scoped("prefill_pool"))
+        self.decode = ServeEngine(
+            cfg, capacity=capacity, cache_len=cache_len,
+            prefill_bucket=prefill_bucket, n_workers=kd,
+            slots_per_chunk=slots_per_chunk,
+            max_admit_per_tick=max_admit_per_tick, seed=seed,
+            # share ONE params pytree value: each half device_puts onto its
+            # own mesh, token streams are bit-identical either way
+            params=self.prefill.params,
+            tenant_weights=tenant_weights, clock=self._now,
+            kv_layout="paged", page_size=page_size, paged_impl=paged_impl,
+            prefix_share=prefix_share, evict=evict,
+            spec=spec, spec_k=spec_k, drafter=drafter, draft_cfg=draft_cfg,
+            draft_params=draft_params, debug_checks=debug_checks,
+            tracer=scoped("decode_pool"))
+
+        self._handoff: Deque[Tuple[Request, ParkedSeq]] = deque()
+        self.metrics = DisaggMetrics(prefill=self.prefill.metrics,
+                                     decode=self.decode.metrics)
+        self._tick = 0
+        self._last_split: Tuple[int, int] = (0, 0)
+        self._note_split(kp, kd)
+        # per-pool host tick-time EMAs: the split policy's cost signal
+        self._ema_p = 0.0
+        self._ema_d = 0.0
+
+    # --- clock ------------------------------------------------------------
+    def _now(self) -> float:
+        if self._clock_ext is not None:
+            return float(self._clock_ext())
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    # --- elasticity -------------------------------------------------------
+    def _note_split(self, kp: int, kd: int) -> None:
+        if (kp, kd) != self._last_split:
+            self._last_split = (kp, kd)
+            self.metrics.split_events.append((self._tick, kp, kd))
+            self.tracer.instant("split.apply", track="split",
+                                prefill=kp, decode=kd)
+
+    def _apply_split(self, kp: int) -> None:
+        kp = max(1, kp)
+        kd = max(self.total_workers - kp, 1)
+        if self.prefill.k != kp:
+            self.prefill.resize(kp)
+        if self.decode.k != kd:
+            self.decode.resize(kd)
+        self._note_split(kp, kd)
+
+    def resize(self, k: int) -> None:
+        """Elastic resize of the TOTAL worker count (the cluster lease
+        hook); the current prefill:decode ratio is preserved and the split
+        policy re-optimizes from there."""
+        k = max(1, int(k))
+        frac = self.prefill.k / max(self.prefill.k + self.decode.k, 1)
+        self.total_workers = k
+        kp = 1 if k == 1 else min(max(int(round(frac * k)), 1), k - 1)
+        self._apply_split(kp)
+
+    def _observe(self) -> SplitObs:
+        now = self._now()
+        p, d = self.prefill, self.decode
+        ptoks = sum(r.prompt_len for r in p.scheduler.pending
+                    if r.arrival_time <= now)
+        ptoks += sum(req.prompt_len - off
+                     for req, off in p._prefilling.values())
+        ptoks += sum(r.prompt_len for r in p._by_slot.values())
+        remaining = lambda r: max(r.max_new_tokens - r.n_generated, 0)  # noqa: E731
+        dtoks = sum(remaining(r) for r in d._by_slot.values())
+        dtoks += sum(remaining(r) for r, _ in self._handoff)
+        dtoks += sum(remaining(r) for r in d.scheduler.pending)
+        return SplitObs(total_workers=self.total_workers,
+                        prefill_backlog_tokens=int(ptoks),
+                        decode_backlog_tokens=int(dtoks),
+                        prefill_tick_s=self._ema_p,
+                        decode_tick_s=self._ema_d,
+                        handoff_depth=len(self._handoff),
+                        tick=self._tick)
+
+    def _maybe_rebalance(self) -> None:
+        pol = self.split_policy
+        if pol is None or self.total_workers < 2:
+            return
+        obs = self._observe()
+        kp = int(pol.decide(obs, current=self.prefill.k))
+        kp = min(max(kp, 1), self.total_workers - 1)
+        if kp != self.prefill.k:
+            with self.tracer.span("split.rebalance", kp=kp,
+                                  kd=self.total_workers - kp,
+                                  prefill_backlog=obs.prefill_backlog_tokens,
+                                  decode_backlog=obs.decode_backlog_tokens):
+                self._apply_split(kp)
+
+    # --- handoff ----------------------------------------------------------
+    def _drain_prefilled(self) -> int:
+        """Extract every slot the prefill pool finished this tick: park its
+        pages to host (one O(pages) gather each) and enqueue the payload
+        for the decode pool."""
+        moved = 0
+        for slot in sorted(self.prefill._by_slot):
+            req = self.prefill._by_slot[slot]
+            with self.tracer.span("handoff.extract", rid=req.rid,
+                                  slot=slot):
+                req, seq = self.prefill.extract(slot)
+            self._handoff.append((req, seq))
+            self.metrics.handoffs += 1
+            self.metrics.handoff_bytes += seq.nbytes
+            self.tracer.count("serve.handoffs")
+            self.tracer.count("serve.handoff_bytes", seq.nbytes)
+            moved += 1
+        return moved
+
+    def _inject_ready(self) -> int:
+        """Move every queued handoff into the decode pool (adopt + queue);
+        the decode scheduler's admission cap then paces the restores, and
+        time spent waiting lands in the request's handoff_delay."""
+        n = 0
+        while self._handoff:
+            req, seq = self._handoff.popleft()
+            with self.tracer.span("handoff.inject", rid=req.rid,
+                                  nbytes=seq.nbytes):
+                self.decode.inject(req, seq)
+            n += 1
+        return n
+
+    # --- lifecycle facade (cluster job hooks) -----------------------------
+    @property
+    def suspended(self) -> bool:
+        return self.prefill.suspended
+
+    def suspend(self) -> None:
+        self.prefill.suspend()
+        self.decode.suspend()
+
+    def resume(self) -> None:
+        self.prefill.resume()
+        self.decode.resume()
+
+    @property
+    def n_active_slots(self) -> int:
+        return (self.prefill.n_active_slots + self.decode.n_active_slots
+                + len(self._handoff))
+
+    def park_excess(self, n: int) -> int:
+        """Lease-shrink hook: parks decode-pool slots (prefill slots are
+        transient — they drain through the handoff within a tick)."""
+        return self.decode.park_excess(n)
+
+    @property
+    def drained(self) -> bool:
+        p, d = self.prefill, self.decode
+        return not (p.scheduler.has_pending or p._by_slot or p._prefilling
+                    or self._handoff
+                    or d.scheduler.has_pending or d._by_slot
+                    or d._prefilling)
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """All requests enter through the prefill pool."""
+        self.prefill.submit(requests)
+
+    def check(self) -> None:
+        """Cross-boundary page-leak guard, on top of each half's own
+        per-tick invariant checks: after a tick every extracted payload
+        must have moved on (nothing parked on the prefill side, no
+        request parked on both sides)."""
+        if self.prefill.mem.n_parked:
+            raise PageError("prefill pool retains parked payloads after "
+                            "the handoff drain")
+        if self._handoff:
+            raise PageError("handoff queue not drained within the tick")
+
+    # --- main loop --------------------------------------------------------
+    def tick(self) -> None:
+        if self.suspended:
+            raise RuntimeError("DisaggEngine is suspended; call resume() "
+                               "before ticking")
+        self._maybe_rebalance()
+        p, d = self.prefill, self.decode
+        if p.scheduler.has_pending or p._by_slot or p._prefilling:
+            t0 = time.perf_counter()
+            with set_mesh(p.mesh):
+                p.tick()
+            dt = time.perf_counter() - t0
+            self._ema_p = dt if self._ema_p == 0 else \
+                0.5 * self._ema_p + 0.5 * dt
+        self._drain_prefilled()
+        self._inject_ready()
+        if d.scheduler.has_pending or d._by_slot or d._prefilling:
+            t0 = time.perf_counter()
+            with set_mesh(d.mesh):
+                d.tick()
+            dt = time.perf_counter() - t0
+            self._ema_d = dt if self._ema_d == 0 else \
+                0.5 * self._ema_d + 0.5 * dt
+        if self.debug_checks:
+            self.check()
+        trc = self.tracer
+        if trc.enabled:
+            trc.count("serve.disagg_ticks")
+            trc.gauge("serve.handoff_queue_depth", len(self._handoff))
+            trc.gauge("serve.prefill_workers", self.prefill.k)
+            trc.gauge("serve.decode_workers", self.decode.k)
+            trc.gauge("serve.prefill_tick_ema_s", self._ema_p)
+            trc.gauge("serve.decode_tick_ema_s", self._ema_d)
+        self._tick += 1
+
+    def finalize(self, wall_s: float) -> None:
+        """Stamp the run's wall time onto the combined and per-pool
+        metrics (tokens/s denominators)."""
+        self.metrics.wall_s = wall_s
+        self.prefill.metrics.wall_s = wall_s
+        self.decode.metrics.wall_s = wall_s
+
+    def run(self, requests: Sequence[Request], *,
+            max_ticks: int = 100_000) -> DisaggMetrics:
+        """Drive the open-loop workload to completion."""
+        if self._clock_ext is not None:
+            raise ValueError("run() paces on the wall clock; with an "
+                             "injected clock drive tick() externally "
+                             "(see repro.cluster.jobs.DisaggServeJob)")
+        self.submit(requests)
+        self._now()  # start the shared clock
+        while not self.drained and self._tick < max_ticks:
+            busy = (self.prefill._by_slot or self.prefill._prefilling
+                    or self.decode._by_slot or self._handoff)
+            if not busy:
+                nxts = [t for t in (self.prefill.scheduler.next_arrival(),
+                                    self.decode.scheduler.next_arrival())
+                        if t is not None]
+                if nxts:
+                    wait = min(nxts) - self._now()
+                    if wait > 0:  # idle until the next open-loop arrival
+                        time.sleep(min(wait, 0.05))
+            self.tick()
+        self.finalize(self._now())
+        return self.metrics

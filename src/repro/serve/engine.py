@@ -118,7 +118,12 @@ class ServeMetrics:
         reg.gauge("serve.requests_finished").set(len(done))
         h_ttft = reg.histogram("serve.ttft_s")
         h_tpot = reg.histogram("serve.tpot_s")
+        # queue delay is arrival -> FIRST admission only; time a parked /
+        # handed-off request spends waiting to be re-admitted accumulates
+        # in the separate handoff-delay histogram (they used to conflate)
         h_qdel = reg.histogram("serve.queue_delay_s")
+        h_hoff = reg.histogram("serve.handoff_delay_s")
+        requeued = 0
         for r in done:
             if r.ttft() is not None:
                 h_ttft.observe(r.ttft())
@@ -126,6 +131,10 @@ class ServeMetrics:
                 h_tpot.observe(r.tpot())
             if r.t_admitted is not None:
                 h_qdel.observe(r.t_admitted - r.arrival_time)
+            if r.handoff_delay > 0:
+                h_hoff.observe(r.handoff_delay)
+                requeued += 1
+        reg.gauge("serve.requeued").set(requeued)
         reg.counter("serve.tokens_generated").inc(
             sum(r.n_generated for r in done))
         per_tick = {
@@ -190,6 +199,9 @@ class ServeMetrics:
             "tpot_p99_s": pct(hist("serve.tpot_s"), 99),
             "queue_delay_p50_s": pct(hist("serve.queue_delay_s"), 50),
             "queue_delay_p99_s": pct(hist("serve.queue_delay_s"), 99),
+            "handoff_delay_p50_s": pct(hist("serve.handoff_delay_s"), 50),
+            "handoff_delay_p99_s": pct(hist("serve.handoff_delay_s"), 99),
+            "requeued_total": int(reg.gauge("serve.requeued").value),
             "occupancy_mean": mean("serve.occupancy"),
             "page_occupancy_mean": mean("serve.page_occupancy"),
             "admission_bytes_total": cnt("serve.admission_bytes"),
@@ -263,6 +275,7 @@ class ServeEngine:
                  draft_cfg: Optional[ModelConfig] = None,
                  draft_params: Optional[Any] = None,
                  debug_checks: bool = False,
+                 decode_enabled: bool = True,
                  tracer: Optional[Tracer] = None,
                  max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
@@ -324,6 +337,14 @@ class ServeEngine:
         self._clock = clock
         self.suspended = False
         self.debug_checks = debug_checks
+        # decode_enabled=False makes this a PREFILL-ONLY pool half: the
+        # solver phase never runs, freshly prefilled slots sit in _by_slot
+        # until a DisaggEngine extract()s them for the decode pool
+        self.decode_enabled = bool(decode_enabled)
+        if not self.decode_enabled and kv_layout != "paged":
+            raise ValueError("decode_enabled=False (a disagg prefill pool) "
+                             "requires kv_layout='paged' — the handoff "
+                             "moves pages")
 
         # speculative decode: each slot proposes spec_k drafts per tick and
         # ONE (B, Q=spec_k+1) verify dispatch scores them all; the drafter
@@ -672,11 +693,13 @@ class ServeEngine:
         self.scheduler.release(req, now)
 
     # --- eviction: park / restore (page-granular preemption) --------------
-    def park(self, slot: int) -> int:
+    def park(self, slot: int, *, requeue: bool = True) -> int:
         """Preempt the decoding request in `slot`: gather ONLY its live
         pages to host memory (one O(pages) device->host copy, no
         re-prefill on return), free its pages + slot, and re-queue the
         request (state PARKED) for a later `restore` through admission.
+        requeue=False leaves the request out of the queue — the disagg
+        handoff path (`extract`) moves it to another engine instead.
         Returns the bytes moved."""
         if self.mem is None:
             raise RuntimeError("park requires kv_layout='paged'")
@@ -690,12 +713,38 @@ class ServeEngine:
                     for name, arr in self.blocks.items()}
             seq = self.mem.park(req.rid, slot, host,
                                 int(self.scheduler.pool.pos[slot]),
-                                int(self.next_tok[slot, 0]))
+                                int(self.next_tok[slot, 0]),
+                                prompt=req.prompt)
             self.scheduler.pool.free(slot)
             req.slot = None
             req.state = RequestState.PARKED
-            self.scheduler.submit(req)  # rejoins tenant queue (old arrival)
+            req.t_parked = self._now()  # handoff-delay clock starts
+            if requeue:
+                self.scheduler.submit(req)  # rejoins tenant queue
         return seq.nbytes
+
+    def extract(self, slot: int) -> Tuple[Request, Any]:
+        """Disaggregation handoff, prefill side: park `slot`'s request
+        WITHOUT re-queueing it and pop the parked payload.  The caller
+        moves (request, ParkedSeq) to the decode pool's `inject`."""
+        req = self._by_slot[slot]
+        self.park(slot, requeue=False)
+        return req, self.mem.take_parked(req.rid)
+
+    def inject(self, req: Request, seq: Any) -> None:
+        """Disaggregation handoff, decode side: adopt a foreign parked
+        sequence (produced by another engine's `extract`) and queue its
+        request — the next admission restores it through the normal
+        parked-restore path (one scatter, zero re-prefill, bit-exact)."""
+        if self.mem is None:
+            raise RuntimeError("inject requires kv_layout='paged'")
+        if req.prompt_len + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new_tokens} exceeds cache_len {self.cache_len}")
+        self.mem.adopt(seq)
+        self.scheduler.submit(req)
+        self.metrics.requests.append(req)
 
     def park_excess(self, n: int) -> int:
         """Park up to `n` decoding slots, lowest priority first (latest
@@ -730,14 +779,18 @@ class ServeEngine:
         return True
 
     def _restore_slot(self, req: Request) -> int:
-        """Re-admit a parked request: fresh pages, ONE scatter of its
-        parked payload, decode state restored — the stream continues
+        """Re-admit a parked request: pages re-matched against the prefix
+        index where possible (restore re-sharing), ONE scatter of the
+        unshared payload, decode state restored — the stream continues
         bit-for-bit with zero prefill compute.  Returns bytes moved."""
         with self.tracer.span("restore", rid=req.rid, slot=req.slot):
-            seq, table = self.mem.restore(req.rid, req.slot)
+            plan = self.mem.restore(req.rid, req.slot)
+            seq, table = plan.seq, plan.table
             nb = min(next_pow2(max(len(table), 1)), self.max_pages_per_slot)
-            ids = np.zeros(nb, np.int32)  # pad rows route to the null page
-            ids[: len(table)] = table
+            # pad rows AND re-shared pages route to the null page: only the
+            # unshared payload is written (AdmitPlan's write-id trick)
+            ids = np.zeros(nb, np.int32)
+            ids[: len(table)] = plan.write_ids
             rows = {}
             for name, arr in seq.pages.items():
                 pad = np.zeros(
@@ -751,7 +804,7 @@ class ServeEngine:
             self.next_tok[req.slot, 0] = seq.next_tok
             self.scheduler.pool.pos[req.slot] = seq.live_tokens
             self._by_slot[req.slot] = req
-        return seq.nbytes
+        return plan.moved_bytes
 
     def _start_decoding(self, req: Request, nxt: int, now: float) -> None:
         """Common PREFILL -> DECODING (or immediate finish) transition once
@@ -1139,7 +1192,10 @@ class ServeEngine:
         emitted = 0
         t_step = 0.0
         drafted = accepted = draft_disp = 0
-        active = sorted(self._by_slot)
+        # a prefill-only pool half never decodes: prefilled slots wait in
+        # _by_slot for the disagg handoff (the else-branch below still
+        # advances schedule time and settles the prefill scatters)
+        active = sorted(self._by_slot) if self.decode_enabled else []
         if active:
             sched.begin_iteration()
             _, _, decode_fn, verify_fn = self._k_cache[self._k_mesh(self.k)]

@@ -51,13 +51,16 @@ class ParkedSeq:
 
     `pages` holds one host array per pool leaf (e.g. "k"/"v"), shaped
     (nb, n_pages, page_size, ...) — whole pages, gathered in table order, so
-    restore is a single scatter into a fresh table."""
+    restore is a single scatter into a fresh table.  `prompt`, when the
+    engine supplies it at park time, lets restore re-match the sequence
+    against the destination prefix index (restore re-sharing)."""
 
     rid: int
     pages: Dict[str, np.ndarray]
     live_tokens: int
     next_tok: int
     nbytes: int
+    prompt: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +75,21 @@ class AdmitPlan:
     write_ids: List[int]
     shared_pages: int
     shared_tokens: int
+
+
+@dataclasses.dataclass
+class RestorePlan:
+    """How to scatter a parked sequence back in: `write_ids[j]` is table[j]
+    for pages whose host payload must be written and NULL (0) for pages
+    re-matched onto resident prefix pages (restore re-sharing), mirroring
+    `AdmitPlan`'s write-id routing.  `moved_bytes` counts only the written
+    pages' payload — re-shared pages move nothing."""
+
+    seq: ParkedSeq
+    table: List[int]
+    write_ids: List[int]
+    shared_pages: int
+    moved_bytes: int
 
 
 class KVMemoryManager:
@@ -292,15 +310,17 @@ class KVMemoryManager:
 
     # --- eviction: park / restore -----------------------------------------
     def park(self, rid: int, slot: int, host_pages: Dict[str, np.ndarray],
-             live_tokens: int, next_tok: int) -> ParkedSeq:
+             live_tokens: int, next_tok: int,
+             prompt: Optional[np.ndarray] = None) -> ParkedSeq:
         """Record `slot`'s gathered pages as parked host state and release
         the device pages (shared pages survive for their other readers).
-        The engine gathers `host_pages` (table order) BEFORE calling."""
+        The engine gathers `host_pages` (table order) BEFORE calling.
+        `prompt` (when given) enables restore re-sharing on the way back."""
         if rid in self._parked:
             raise PageError(f"request {rid} is already parked")
         nbytes = int(sum(a.nbytes for a in host_pages.values()))
         seq = ParkedSeq(rid=rid, pages=host_pages, live_tokens=live_tokens,
-                        next_tok=int(next_tok), nbytes=nbytes)
+                        next_tok=int(next_tok), nbytes=nbytes, prompt=prompt)
         self._parked[rid] = seq
         freed = self.pages.free_slot(slot)
         self._drop_index_entries(freed)
@@ -312,16 +332,56 @@ class KVMemoryManager:
     def has_parked(self, rid: int) -> bool:
         return rid in self._parked
 
-    def restore(self, rid: int, slot: int) -> Tuple[ParkedSeq, List[int]]:
-        """Allocate fresh pages for a parked sequence and hand the engine
-        the payload + page ids to scatter it back through.  The restored
-        pages are exclusive (re-sharing after a round trip is a follow-on)."""
+    def take_parked(self, rid: int) -> ParkedSeq:
+        """Pop a parked payload for transfer to ANOTHER manager (`adopt`) —
+        the disagg prefill->decode handoff.  The bytes were already charged
+        as park_bytes here; the adopting side charges restore_bytes when it
+        scatters, so each half's kv_moved ledger covers its own transfers."""
+        return self._parked.pop(rid)
+
+    def adopt(self, seq: ParkedSeq) -> None:
+        """Accept a parked payload gathered by another manager: the next
+        `restore(seq.rid, ...)` scatters it into THIS pool."""
+        if seq.rid in self._parked:
+            raise PageError(f"request {seq.rid} is already parked here")
+        self._parked[seq.rid] = seq
+
+    def restore(self, rid: int, slot: int) -> RestorePlan:
+        """Allocate pages for a parked sequence and hand the engine the
+        payload + write ids to scatter it back through.  The sequence's
+        prompt (when parked with one) is RE-MATCHED against this manager's
+        prefix index first: full prompt pages already resident are shared
+        again (refcount bump, nothing scattered) so a parked or handed-off
+        few-shot stream regains its page dedup.  Only FULL prompt pages are
+        ever re-shared — the page holding the prompt tail also holds this
+        stream's own decode KV, which an indexed donor page does not."""
         seq = self._parked.pop(rid)
-        table = self.pages.alloc_slot(slot, seq.live_tokens)
+        shared: List[int] = []
+        if seq.prompt is not None and len(seq.prompt) and self.prefix_share:
+            cand, _ = self.match_prefix(seq.prompt)
+            nfull = len(seq.prompt) // self.page_size
+            shared = cand[:min(len(cand), nfull)]
+        self.pages.alloc_slot(slot, 0)
+        if shared:
+            self.pages.share(slot, shared)
+            self.shared_page_hits += len(shared)
+            self.shared_token_hits += len(shared) * self.page_size
+            self.tracer.count("serve.prefix_hits")
+            self.tracer.count("serve.prefix_hit_pages", len(shared))
+        fresh = self.pages.ensure(slot, seq.live_tokens)
+        table = self.pages.table(slot)
+        write = set(fresh)
+        write_ids = [pg if pg in write else 0 for pg in table]
+        if seq.prompt is not None and len(seq.prompt):
+            # the restored pages now also donate: index the prompt so later
+            # admissions (and later restores) can map onto them
+            self.register_prefix(slot, seq.prompt)
+        moved = seq.nbytes * len(fresh) // max(len(table), 1)
         self.restored_total += 1
-        self.restore_bytes += seq.nbytes
-        self.tracer.count("serve.restore_bytes", seq.nbytes)
-        return seq, table
+        self.restore_bytes += moved
+        self.tracer.count("serve.restore_bytes", moved)
+        return RestorePlan(seq=seq, table=table, write_ids=write_ids,
+                           shared_pages=len(shared), moved_bytes=moved)
 
     @property
     def n_parked(self) -> int:
@@ -464,17 +524,24 @@ def _selftest(seed: int = 0, steps: int = 2000) -> None:
         elif op == "park" and live:
             slot = int(rng.choice(list(live)))
             st = live[slot]
-            mem.park(st["rid"], slot, host_payload(slot), st["pos"], 7)
+            mem.park(st["rid"], slot, host_payload(slot), st["pos"], 7,
+                     prompt=st["prompt"])
             parked.append((st["rid"], st["pos"]))
             del live[slot]
         elif op == "restore" and parked and free_slots:
             rid, n_tok = parked.pop()
             slot = free_slots[0]
-            seq, table = mem.restore(rid, slot)
-            assert seq.live_tokens == n_tok
-            assert len(table) == mem.pages.pages_for(n_tok)
-            live[slot] = {"pos": n_tok,
-                          "prompt": np.zeros(0, np.int64), "rid": rid}
+            plan = mem.restore(rid, slot)
+            assert plan.seq.live_tokens == n_tok
+            assert len(plan.table) == mem.pages.pages_for(n_tok)
+            # re-shared pages never include the prompt's partial tail and
+            # write ids route exactly the unshared pages
+            assert plan.shared_pages <= len(plan.seq.prompt) // ps
+            assert sum(1 for w in plan.write_ids if w == 0) \
+                == plan.shared_pages
+            assert plan.moved_bytes <= plan.seq.nbytes
+            live[slot] = {"pos": n_tok, "prompt": plan.seq.prompt,
+                          "rid": rid}
         elif op == "defrag":
             mem.defrag()
         mem.check({s: st["pos"] for s, st in live.items()})

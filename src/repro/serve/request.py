@@ -40,6 +40,12 @@ class Request:
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
+    # park/handoff bookkeeping: t_parked is set while the request's KV sits
+    # host-side (eviction park or disagg handoff queue); handoff_delay
+    # accumulates park->re-admission waits, reported separately from the
+    # arrival->first-admission queue delay
+    t_parked: Optional[float] = None
+    handoff_delay: float = 0.0
 
     @property
     def prompt_len(self) -> int:

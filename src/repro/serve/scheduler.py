@@ -192,6 +192,11 @@ class SlotScheduler:
             req.state = RequestState.PREFILL
             if req.t_admitted is None:  # parked re-admissions keep the first
                 req.t_admitted = now
+            if req.t_parked is not None:
+                # time spent parked / in a handoff queue is accounted apart
+                # from the arrival->first-admission queue delay
+                req.handoff_delay += max(now - req.t_parked, 0.0)
+                req.t_parked = None
             admitted.append(req)
         return admitted
 

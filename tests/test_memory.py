@@ -270,9 +270,13 @@ def test_park_restore_roundtrip_bookkeeping():
     assert mem.park_bytes == host["k"].nbytes
     with pytest.raises(PageError):
         mem.park(7, 0, host, 1, 1)  # double park of the same rid
-    seq, table = mem.restore(7, 3)
-    assert seq.next_tok == 42 and seq.live_tokens == 10
-    assert len(table) == 3 == used_before
+    plan = mem.restore(7, 3)
+    assert plan.seq.next_tok == 42 and plan.seq.live_tokens == 10
+    assert len(plan.table) == 3 == used_before
+    # the donor slot was freed at park, so nothing re-shares here: every
+    # page must be written and the full payload counts as moved
+    assert plan.shared_pages == 0
+    assert plan.write_ids == plan.table
     mem.check({3: 10})
     assert mem.n_parked == 0 and mem.restore_bytes == mem.park_bytes
 
