@@ -28,6 +28,13 @@ Three modes:
   token streams; the record carries per-arm TTFT/TPOT/tokens-per-s plus
   handoff and split accounting (the claim: disagg recovers the TTFT the
   paged arm loses to prefill-decode interleaving).
+- ``--chaos``: fault-free vs injected-crash A/B on the same workload —
+  the chaos arm takes a scripted mid-run worker crash (plus a straggler)
+  and must re-execute every victim to streams bit-equal to the fault-free
+  oracle, with no request lost (finished or EXPIRED); the record carries
+  crash/retry/shed counts and recovery latency in ticks.  A deadline
+  sub-arm re-runs the plan with tight per-request deadlines to exercise
+  load shedding.
 - ``--share``: prefix-sharing on/off A/B on a few-shot shared-header
   workload (every prompt repeats the same long header + a unique
   question).  Both arms run the paged engine on the SAME trace and must
@@ -48,8 +55,10 @@ import numpy as np
 from repro.configs import get_config, smoke_variant
 from repro.core import ElasticScalingPolicy, ScaleEvent
 from repro.obs import Tracer, dominant_host_phase, phase_attribution
-from repro.serve import (DisaggEngine, QueueSplitPolicy, Request, ServeEngine,
-                         poisson_arrivals, synthetic_requests)
+from repro.serve import (DisaggEngine, FaultInjector, FaultPlan,
+                         QueueSplitPolicy, Request, ServeEngine,
+                         poisson_arrivals, synthetic_requests, worker_crash,
+                         worker_slow)
 
 
 def run(arch: str = "smollm-360m", *, requests: int = 24, rate: float = 30.0,
@@ -508,6 +517,110 @@ def run_disagg(arch: str = "smollm-360m", *, fast: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Chaos A/B: fault-free vs injected-crash, bit-equal recovery
+# ---------------------------------------------------------------------------
+
+
+def run_chaos(arch: str = "smollm-360m", *, fast: bool = False,
+              dry_run: bool = False, seed: int = 0) -> dict:
+    """Fault-free vs injected-crash A/B on the SAME workload: arm A is a
+    paged 2-worker engine left alone (the oracle), arm B the identical
+    engine with a scripted `worker_crash` mid-run plus a `worker_slow`
+    straggler.  Greedy decoding is deterministic, so crash victims that
+    re-execute from scratch must land bit-equal to the oracle streams —
+    the crash-consistency claim.  The record carries recovery latency
+    (ticks from crash to last victim finished), retry and shed counts,
+    and the throughput cost of the fault.  A third sub-arm re-runs the
+    chaos plan with tight per-request deadlines to exercise load
+    shedding: every request either finishes bit-equal or is EXPIRED."""
+    cfg = smoke_variant(get_config(arch))
+    capacity = 4 if dry_run else 8
+    cache_len = 256 if dry_run else 512
+    kw = dict(capacity=capacity, cache_len=cache_len, prefill_bucket=16,
+              n_workers=2, kv_layout="paged", seed=seed)
+    workload = lambda: _mixed_workload(cfg, fast=fast or dry_run, seed=seed)  # noqa: E731
+    max_ticks = 60 if dry_run else 100_000
+    crash_at = 3 if (fast or dry_run) else 6
+
+    arms = {}
+    streams = {}
+    # arm A: fault-free oracle
+    engine = ServeEngine(cfg, debug_checks=True, **kw)
+    engine.run(workload(), max_ticks=max_ticks)
+    streams["clean"] = {r.rid: tuple(r.generated)
+                       for r in engine.metrics.requests}
+    arms["clean"] = _arm_summary(engine)
+
+    # arm B: scripted crash + straggler on the same trace
+    plan = FaultPlan([worker_crash(crash_at),
+                      worker_slow(crash_at + 2, 0, 2.0)])
+    engine = ServeEngine(cfg, fault_injector=FaultInjector(plan),
+                         debug_checks=True, **kw)
+    engine.run(workload(), max_ticks=max_ticks)
+    m = engine.metrics
+    s = m.summarize()
+    streams["chaos"] = {r.rid: tuple(r.generated) for r in m.requests
+                        if r.state.value == "finished"}
+    arms["chaos"] = _arm_summary(engine)
+    arms["chaos"].update({
+        "crashes": s["crashes_total"],
+        "retries": s["retries_total"],
+        "shed_requests": s["shed_requests"],
+        "recoveries": s["recoveries"],
+        "recovery_ticks_mean": s["recovery_ticks_mean"],
+        "recovery_events": s["recovery_events"],
+    })
+
+    # arm C: same chaos plan + tight deadlines -> load shedding
+    plan = FaultPlan([worker_crash(crash_at)])
+    engine = ServeEngine(cfg, fault_injector=FaultInjector(plan),
+                         debug_checks=True, **kw)
+    reqs = workload()
+    for r in reqs:
+        r.deadline = 0.25 if (fast or dry_run) else 0.5
+        r.max_retries = 1
+    engine.run(reqs, max_ticks=max_ticks)
+    s = engine.metrics.summarize()
+    arms["deadline"] = {
+        "requests_finished": s["requests_finished"],
+        "shed_requests": s["shed_requests"],
+        "retries": s["retries_total"],
+        "tokens_generated": s["tokens_generated"],
+    }
+    fin_or_shed = s["requests_finished"] + s["shed_requests"]
+
+    rec = {
+        "bench": "serve_bench_chaos",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "capacity": capacity,
+        "cache_len": cache_len,
+        "crash_at": crash_at,
+        "clean": arms["clean"],
+        "chaos": arms["chaos"],
+        "deadline": arms["deadline"],
+        # bit-equality: every request the chaos arm FINISHED must match the
+        # fault-free oracle stream exactly (crash victims re-executed)
+        "streams_equal": all(streams["clean"].get(rid) == g
+                             for rid, g in streams["chaos"].items()),
+        "all_completed": (arms["chaos"]["requests_finished"]
+                          + arms["chaos"]["shed_requests"]
+                          == arms["clean"]["requests_finished"]),
+    }
+    if not dry_run:
+        assert rec["streams_equal"], \
+            "chaos-arm survivor streams diverge from the fault-free oracle"
+        assert rec["all_completed"], \
+            "chaos arm lost requests (neither finished nor shed)"
+        assert arms["chaos"]["crashes"] >= 1
+        assert arms["chaos"]["recoveries"] >= 1
+        assert fin_or_shed == arms["clean"]["requests_finished"], \
+            "deadline arm lost requests (neither finished nor EXPIRED)"
+    return rec
+
+
 def main(fast: bool = False) -> None:
     """Entry point for benchmarks.run registration."""
     print(json.dumps(run(requests=8 if fast else 24)))
@@ -516,6 +629,7 @@ def main(fast: bool = False) -> None:
     print(json.dumps(run_share(fast=fast)))
     print(json.dumps(run_attribution(fast=fast)))
     print(json.dumps(run_disagg(fast=fast)))
+    print(json.dumps(run_chaos(fast=fast)))
 
 
 def _cli() -> None:
@@ -540,6 +654,10 @@ def _cli() -> None:
     ap.add_argument("--disagg", action="store_true",
                     help="disaggregated-vs-monolithic A/B on the mixed "
                          "workload (flat oracle + paged + disagg arms)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-free vs injected-crash A/B: survivor "
+                         "streams must be bit-equal to the fault-free "
+                         "oracle; records recovery latency/retries/shed")
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
@@ -556,6 +674,9 @@ def _cli() -> None:
     elif args.disagg:
         rec = run_disagg(args.arch, fast=args.fast, dry_run=args.dry_run,
                          seed=args.seed)
+    elif args.chaos:
+        rec = run_chaos(args.arch, fast=args.fast, dry_run=args.dry_run,
+                        seed=args.seed)
     elif args.share:
         rec = run_share(args.arch, fast=args.fast, dry_run=args.dry_run,
                         seed=args.seed)

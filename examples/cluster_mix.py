@@ -55,10 +55,12 @@ if __name__ == "__main__":
     ])
 
     pool = DevicePool(8, pst=[1.0] * 6 + [1.5] * 2)
-    orch = ClusterOrchestrator(pool, [trainA, trainB, server], trace,
-                               dt=1.0, max_ticks=500,
-                               trace_out=args.trace_out)
-    report = orch.run()
+    # context manager: the --trace-out stream is closed (and flushed) even
+    # if a job raises mid-run
+    with ClusterOrchestrator(pool, [trainA, trainB, server], trace,
+                             dt=1.0, max_ticks=500,
+                             trace_out=args.trace_out) as orch:
+        report = orch.run()
     if args.trace_out:
         print(f"per-tick stats streamed to {args.trace_out} "
               f"({report.ticks} lines)")

@@ -47,6 +47,16 @@ python benchmarks/serve_bench.py --share --dry-run
 echo "== disagg-vs-monolithic serve A/B (dry run) =="
 python benchmarks/serve_bench.py --disagg --dry-run
 
+echo "== chaos smoke (injected crash + recovery spans in the trace) =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 8 --kv-layout paged --workers 2 --scale-events "" \
+    --chaos "crash@t=5" --trace-out /tmp/chaos_trace.json --seed 0
+python -m repro.obs.trace --validate /tmp/chaos_trace.json \
+    --require fault.inject,recovery.crash,recovery.requeue,recovery.done
+
+echo "== fault-free vs injected-crash A/B (dry run) =="
+python benchmarks/serve_bench.py --chaos --dry-run
+
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast
 python benchmarks/cluster_bench.py --dry-run

@@ -25,12 +25,13 @@ from .jobs import (ClusterJob, DisaggServeJob, JobSpec, JobState, LMTrainJob,
                    ServeJob, TrainJob, cocoa_train_job)
 from .orchestrator import ClusterOrchestrator, ClusterReport, TickStats
 from .pool import DevicePool
-from .trace import ClusterTrace, TraceEvent, arrive, burst, depart
+from .trace import (ClusterTrace, TraceEvent, arrive, burst, depart, fail,
+                    slow)
 
 __all__ = [
     "ClusterJob", "ClusterOrchestrator", "ClusterReport", "ClusterTrace",
     "DevicePool", "DisaggServeJob", "FairShareAllocator", "JobDemand",
     "JobSpec", "JobState", "LMTrainJob", "ServeJob", "TickStats",
     "TraceEvent", "TrainJob", "UsageLedger", "arrive", "burst",
-    "cocoa_train_job", "depart",
+    "cocoa_train_job", "depart", "fail", "slow",
 ]

@@ -86,6 +86,13 @@ class ClusterJob:
         self.presence_time = 0.0  # integral of time with demand > 0
         self.preemptions = 0      # lease shrunk while demand persisted
         self.resizes = 0
+        # fault accounting: node_failures counts zero-grace losses of a
+        # leased node; recoveries counts recovery actions actually run
+        # (checkpoint rollback, serve crash_worker); recovery_ticks is the
+        # simulated work re-done because of them
+        self.node_failures = 0
+        self.recoveries = 0
+        self.recovery_ticks = 0.0
 
     # --- lifecycle --------------------------------------------------------
     def arrive(self, now: float) -> None:
@@ -120,6 +127,13 @@ class ClusterJob:
     def advance(self, dt: float, now: float) -> None:  # pragma: no cover
         raise NotImplementedError
 
+    def on_node_failure(self, now: float) -> None:
+        """Zero-grace loss of one leased node (the orchestrator routes
+        `fail` trace events here).  The base class only counts it —
+        subclasses that hold in-flight state on the node recover it
+        (checkpoint rollback for trainers, `crash_worker` for servers)."""
+        self.node_failures += 1
+
     def queueing_delay(self) -> Optional[float]:
         """Time from arrival to first node lease (cluster admission wait)."""
         if self.arrival_time is None or self.first_service_time is None:
@@ -140,6 +154,10 @@ class ClusterJob:
                                  / (self.spec.weight * self.presence_time)
                                  if self.presence_time > 0 else None),
             "preemptions": self.preemptions, "resizes": self.resizes,
+            "node_failures": self.node_failures,
+            "recoveries": self.recoveries,
+            "retries": 0, "shed_requests": 0,
+            "recovery_ticks": self.recovery_ticks,
         }
 
 
@@ -156,7 +174,10 @@ class TrainJob(ClusterJob):
                  metric_fn: Callable[[], float], *,
                  k_tasks: int, iterations: int, mode: str = "microtask",
                  sample_time: Optional[float] = None,
-                 comm_overhead: float = 0.0, seed: int = 0):
+                 comm_overhead: float = 0.0, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_state_fn: Optional[Callable[[], Dict]] = None,
+                 ckpt_restore_fn: Optional[Callable[[Dict], None]] = None):
         super().__init__(spec)
         if mode not in ("microtask", "unitask"):
             raise ValueError(f"unknown TrainJob mode {mode!r}")
@@ -166,6 +187,17 @@ class TrainJob(ClusterJob):
         self.iterations_done = 0
         self._solver_step = solver_step
         self._metric_fn = metric_fn
+        self.store = store
+        # crash consistency: every `ckpt_every` iterations snapshot the
+        # per-sample chunk state (`store.state`, e.g. CoCoA's alphas) plus
+        # whatever solver globals `ckpt_state_fn` exposes (e.g. the primal
+        # w); a node failure rolls back to the last snapshot and re-does
+        # the lost iterations (progress rollback, not bit-exact replay —
+        # the engine's partition rng is deliberately not checkpointed)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
+        self._ckpt_state_fn = ckpt_state_fn
+        self._ckpt_restore_fn = ckpt_restore_fn
         self._budget = 0.0  # accumulated sim-time not yet spent on iterations
         # per-sample time scale: chosen so one full-allocation iteration
         # costs ~1 simulated second unless the caller overrides it
@@ -211,9 +243,46 @@ class TrainJob(ClusterJob):
                             eval_every=1)
             self._budget -= self.engine.sim_time - t0
             self.iterations_done += 1
+            self._maybe_checkpoint()
         if self.iterations_done >= self.iterations:
             self.state = JobState.FINISHED
             self.finish_time = now + dt
+
+    # --- crash consistency ------------------------------------------------
+    def _maybe_checkpoint(self) -> None:
+        if not self.ckpt_dir or self.ckpt_every <= 0 \
+                or self.iterations_done % self.ckpt_every:
+            return
+        from ..checkpoint.ckpt import save_checkpoint
+        save_checkpoint(
+            self.ckpt_dir, self.iterations_done,
+            self._ckpt_state_fn() if self._ckpt_state_fn else {},
+            chunk_state={k: np.asarray(v)
+                         for k, v in self.store.state.items()})
+
+    def recover(self, now: float) -> None:
+        """Roll back to the last snapshot; the lost iterations re-run on
+        subsequent `advance` ticks and are charged to `recovery_ticks`."""
+        if not self.ckpt_dir or self.ckpt_every <= 0:
+            return  # nothing persisted: chunk state survives in host memory
+        from ..checkpoint.ckpt import latest_step, load_checkpoint
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return  # crashed before the first snapshot
+        template = self._ckpt_state_fn() if self._ckpt_state_fn else {}
+        state, _, meta = load_checkpoint(self.ckpt_dir, step, template)
+        if self._ckpt_restore_fn is not None:
+            self._ckpt_restore_fn(state)
+        for k, v in meta["chunk_state"].items():
+            self.store.state[k] = v
+        self.recoveries += 1
+        self.recovery_ticks += max(self.iterations_done - step, 0)
+        del self.engine.history[step:]
+        self.iterations_done = step
+
+    def on_node_failure(self, now: float) -> None:
+        super().on_node_failure(now)
+        self.recover(now)
 
     # --- results ----------------------------------------------------------
     @property
@@ -237,10 +306,16 @@ def cocoa_train_job(name: str, *, iterations: int, k_tasks: int = 8,
                     max_nodes: Optional[int] = None, mode: str = "microtask",
                     n: int = 4000, f: int = 64, chunk: int = 50,
                     lam: float = 1e-3, seed: int = 0,
-                    sample_time: Optional[float] = None) -> TrainJob:
+                    sample_time: Optional[float] = None,
+                    ckpt_dir: Optional[str] = None,
+                    ckpt_every: int = 0) -> TrainJob:
     """A self-contained CoCoA/SVM training job (the paper's GLM workload);
     its per-sample dual state lives in the chunks, so cluster preemption and
-    restoration never lose optimizer progress."""
+    restoration never lose optimizer progress.  With `ckpt_dir` set, the
+    duals (chunk state) and the primal w snapshot every `ckpt_every`
+    iterations and a node failure rolls the job back to the last snapshot."""
+    import jax.numpy as jnp
+
     x, y = make_svm_data(n, f, seed=seed)
     store = ChunkStore({"x": x, "y": y}, chunk_size=chunk)
     solver = CoCoASolver(store, lam=lam, seed=seed)
@@ -248,7 +323,11 @@ def cocoa_train_job(name: str, *, iterations: int, k_tasks: int = 8,
                    max_nodes=max_nodes if max_nodes is not None else k_tasks)
     job = TrainJob(spec, store, lambda s, a, sh: solver.step(s, a, sh),
                    solver.metric, k_tasks=k_tasks, iterations=iterations,
-                   mode=mode, seed=seed, sample_time=sample_time)
+                   mode=mode, seed=seed, sample_time=sample_time,
+                   ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                   ckpt_state_fn=lambda: {"w": np.asarray(solver.w)},
+                   ckpt_restore_fn=lambda s: setattr(
+                       solver, "w", jnp.asarray(s["w"])))
     job.solver = solver  # exposed for state equality checks in tests
     return job
 
@@ -266,7 +345,8 @@ class LMTrainJob(ClusterJob):
 
     def __init__(self, spec: JobSpec, cfg, tc, *,
                  batch_fn: Callable[[int], Dict], steps: int,
-                 step_time: float = 1.0, seed: int = 0):
+                 step_time: float = 1.0, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
         super().__init__(spec)
         from ..launch.elastic import ElasticTrainer  # deferred: heavy import
         self.trainer = ElasticTrainer(cfg, tc, seed=seed)
@@ -274,6 +354,12 @@ class LMTrainJob(ClusterJob):
         self.steps = steps
         self.steps_done = 0
         self.step_time = step_time
+        # crash consistency: params + optimizer state snapshot every
+        # `ckpt_every` steps; a node failure rolls back to the newest
+        # snapshot and re-runs the lost steps (batch_fn is a pure function
+        # of the step index, so the replayed steps see identical batches)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(ckpt_every)
         self._budget = 0.0
         self.metrics_history: List[Dict] = []
 
@@ -303,9 +389,41 @@ class LMTrainJob(ClusterJob):
             self.metrics_history.append(m)
             self.steps_done += 1
             self._budget -= it_time
+            if self.ckpt_dir and self.ckpt_every > 0 \
+                    and self.steps_done % self.ckpt_every == 0:
+                from ..checkpoint.ckpt import save_checkpoint
+                save_checkpoint(self.ckpt_dir, self.steps_done,
+                                self.trainer.params, self.trainer.opt_state)
         if self.steps_done >= self.steps:
             self.state = JobState.FINISHED
             self.finish_time = now + dt
+
+    # --- crash consistency ------------------------------------------------
+    def recover(self, now: float) -> None:
+        """Roll back params/opt state to the newest on-disk snapshot."""
+        if not self.ckpt_dir:
+            return
+        from ..checkpoint.ckpt import latest_step, load_checkpoint
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return  # crashed before the first snapshot
+        params, opt, _ = load_checkpoint(
+            self.ckpt_dir, step, self.trainer.params, self.trainer.opt_state)
+        self.trainer.params = params
+        self.trainer.opt_state = opt
+        # the restored arrays live on host — exactly the trainer's
+        # suspended state — so resume() re-shards them onto the lease
+        self.trainer.suspended = True
+        if self.nodes:
+            self.trainer.resume(len(self.nodes))
+        self.recoveries += 1
+        self.recovery_ticks += max(self.steps_done - step, 0)
+        del self.metrics_history[step:]
+        self.steps_done = step
+
+    def on_node_failure(self, now: float) -> None:
+        super().on_node_failure(now)
+        self.recover(now)
 
     def loss_curve(self) -> List[float]:
         return [m["loss"] for m in self.metrics_history]
@@ -394,7 +512,11 @@ class ServeJob(ClusterJob):
 
     # --- scheduling -------------------------------------------------------
     def backlog(self, now: float) -> int:
-        return len(self.engine._by_slot) + self.engine.scheduler.n_arrived(now)
+        # crash victims waiting out their retry backoff are still demand —
+        # without them a post-crash lease could drop to zero and the engine
+        # would never tick again to re-enqueue them
+        return (self.engine.n_active_slots + len(self.engine._retrying)
+                + self.engine.scheduler.n_arrived(now))
 
     def demand(self, now: float) -> int:
         if not self.active:
@@ -445,9 +567,23 @@ class ServeJob(ClusterJob):
             with set_mesh(self.engine.mesh):
                 self.engine.tick()
 
+    def on_node_failure(self, now: float) -> None:
+        """A leased node died: the in-flight decodes it hosted are gone.
+        Map the node loss onto the engine's crash path — victims re-queue
+        through RETRYING and the engine shrinks by one logical worker (the
+        orchestrator hands us the shrunken lease right after)."""
+        super().on_node_failure(now)
+        self._sim_now = max(self._sim_now, now)
+        if self.engine.suspended:
+            return  # scale-to-zero: no KV resident anywhere to lose
+        self.engine.crash_worker()
+        self.recoveries += 1
+
     def drained(self) -> bool:
         return (not self.engine._by_slot
-                and not self.engine.scheduler.has_pending)
+                and not self.engine._prefilling
+                and not self.engine.scheduler.has_pending
+                and not self.engine._retrying)
 
     def service_time(self) -> float:
         """Simulated time in service (first lease -> now); throughput is
@@ -470,9 +606,15 @@ class ServeJob(ClusterJob):
         m = self.engine.metrics
         if m.wall_s == 0.0:  # mid-run snapshot: derive, don't mutate
             m = dataclasses.replace(m, wall_s=self.service_time())
-        s.update({"serve": m.summarize(),
+        srv = m.summarize()
+        s.update({"serve": srv,
                   "expected_requests": self.expected_requests,
-                  "kv_moved_bytes": self.kv_moved_bytes})
+                  "kv_moved_bytes": self.kv_moved_bytes,
+                  # the serve engine is the authoritative fault ledger here
+                  "retries": srv.get("retries_total", 0),
+                  "shed_requests": srv.get("shed_requests", 0),
+                  "recovery_ticks": sum(
+                      rt for _, rt, _ in srv.get("recovery_events", []))})
         return s
 
 
@@ -530,6 +672,8 @@ class DisaggServeJob(ServeJob):
     def backlog(self, now: float) -> int:
         eng = self.engine
         return (eng.n_active_slots
+                + len(eng.prefill._retrying) + len(eng.decode._retrying)
+                + len(eng._handoff_retry)
                 + eng.prefill.scheduler.n_arrived(now)
                 + eng.decode.scheduler.n_arrived(now))
 
@@ -567,6 +711,18 @@ class DisaggServeJob(ServeJob):
     def drained(self) -> bool:
         return self.engine.drained
 
+    def on_node_failure(self, now: float) -> None:
+        """Node loss routed through the disagg fault path (default: the
+        decode pool — losing its only worker collapses the engine to
+        degraded monolithic serving rather than killing the job)."""
+        ClusterJob.on_node_failure(self, now)
+        self._sim_now = max(self._sim_now, now)
+        if self.engine.suspended:
+            return
+        from ..faults import worker_crash
+        self.engine.apply_fault(worker_crash(at=max(int(now), 0)))
+        self.recoveries += 1
+
     def maybe_finish(self, now: float) -> None:
         if self.active and self.no_more_arrivals and self.drained():
             self.state = JobState.FINISHED
@@ -577,7 +733,12 @@ class DisaggServeJob(ServeJob):
         s = ClusterJob.summary(self)
         m = self.engine.metrics
         wall = m.wall_s if m.wall_s else self.service_time()
-        s.update({"serve": m.summarize(wall_s=wall),
+        srv = m.summarize(wall_s=wall)
+        s.update({"serve": srv,
                   "expected_requests": self.expected_requests,
-                  "kv_moved_bytes": self.kv_moved_bytes})
+                  "kv_moved_bytes": self.kv_moved_bytes,
+                  "retries": srv.get("retries_total", 0),
+                  "shed_requests": srv.get("shed_requests", 0),
+                  "recovery_ticks": sum(
+                      rt for _, rt, _ in srv.get("recovery_events", []))})
         return s

@@ -53,6 +53,14 @@ class ClusterReport:
     # AND priority-admission parks, plus their restores) — the cluster-level
     # cost of page-granular eviction, O(moved pages)
     kv_moved_bytes: int = 0
+    # fault/recovery totals (summed over job summaries): node losses seen
+    # by the pool, recovery events the jobs ran, serve-side crash retries
+    # and deadline sheds, and total ticks of re-done work
+    node_failures: int = 0
+    recoveries: int = 0
+    retries: int = 0
+    shed_requests: int = 0
+    recovery_ticks: float = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)  # deep-converts TickStats too
@@ -81,6 +89,8 @@ class ClusterOrchestrator:
                 raise ValueError(f"duplicate job name {j.spec.name!r}")
             self.jobs[j.spec.name] = j
         for ev in trace.events:
+            if ev.kind in ("fail", "slow") and not ev.job:
+                continue  # node-scoped fault: no job to validate
             if ev.job not in self.jobs:
                 raise ValueError(f"trace references unknown job {ev.job!r}")
         self.allocator = allocator or FairShareAllocator()
@@ -94,9 +104,64 @@ class ClusterOrchestrator:
         self.timeline: List[TickStats] = []
         self._prev_alloc: Dict[str, int] = {}
 
+    # --- context manager: `with ClusterOrchestrator(...) as orch` closes
+    # the --trace-out stream even when the run raises mid-tick ------------
+    def __enter__(self) -> "ClusterOrchestrator":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close_trace()
+        return False
+
     # --- event application ------------------------------------------------
+    def _apply_fault(self, ev) -> None:
+        trc = self.tracer
+        node = ev.payload.get("node")
+        if node is None:
+            # zero-grace lease revocation: the job keeps its chunk/slot
+            # state (Chicle preemption) but holds no nodes until the
+            # allocator re-grants on a later tick
+            job = self.jobs[ev.job]
+            job.preemptions += 1
+            self.pool.release_all(ev.job)
+            job.on_allocation([], [], self.now)
+            trc.instant("fault.inject", track="faults",
+                        args={"t": self.now, "kind": "revoke_lease",
+                              "job": ev.job})
+            trc.count("fault.revoke_lease")
+            trc.count("cluster.preemptions")
+            return
+        owner = self.pool.fail_node(int(node))
+        trc.instant("fault.inject", track="faults",
+                    args={"t": self.now, "kind": "worker_crash",
+                          "node": int(node), "owner": owner})
+        trc.count("fault.worker_crash")
+        if owner is None:
+            return  # free (or already-dead) node: nobody to recover
+        job = self.jobs[owner]
+        with trc.span("recovery.crash", track="faults", job=owner,
+                      node=int(node)):
+            job.on_node_failure(self.now)
+        # the dead node is out of the lease NOW; hand the job its shrunken
+        # live view rather than letting it run a tick on a ghost node
+        nodes = self.pool.nodes_of(owner)
+        job.on_allocation(nodes, self.pool.psts_of(nodes), self.now)
+
     def _apply_events(self) -> None:
         for ev in self.trace.pop_due(self.now):
+            if ev.kind == "fail":
+                self._apply_fault(ev)
+                continue
+            if ev.kind == "slow":
+                node = int(ev.payload["node"])
+                factor = float(ev.payload.get("factor", 2.0))
+                self.pool.slow_node(node, factor)
+                self.tracer.instant("fault.inject", track="faults",
+                                    args={"t": self.now, "kind":
+                                          "worker_slow", "node": node,
+                                          "factor": factor})
+                self.tracer.count("fault.worker_slow")
+                continue
             job = self.jobs[ev.job]
             if ev.kind == "arrive":
                 job.arrive(self.now)
@@ -135,7 +200,7 @@ class ClusterOrchestrator:
             jds = [JobDemand(j.spec.name, demands[j.spec.name],
                              j.spec.weight, j.spec.priority) for j in ordered]
             alloc = self.allocator.allocate(
-                self.pool.n_nodes, jds,
+                self.pool.n_alive, jds,  # dead nodes never re-lease
                 credit=self.ledger.snapshot() if self.ledger else None)
             if self.ledger is not None:
                 self.ledger.update(alloc, jds, self.dt)
@@ -227,6 +292,7 @@ class ClusterOrchestrator:
             trc.gauge("cluster.utilization",
                       used / total if total else 0.0)
             trc.gauge("cluster.fairness_jain", jain_index(rates))
+        jobs_sum = {n: j.summary() for n, j in self.jobs.items()}
         return ClusterReport(
             makespan=makespan,
             utilization=used / total if total else 0.0,
@@ -234,8 +300,17 @@ class ClusterOrchestrator:
             preemptions=sum(j.preemptions for j in self.jobs.values()),
             migrations=self.pool.migrations,
             ticks=len(self.timeline),
-            jobs={n: j.summary() for n, j in self.jobs.items()},
+            jobs=jobs_sum,
             timeline=self.timeline,
             kv_moved_bytes=sum(getattr(j, "kv_moved_bytes", 0)
                                for j in self.jobs.values()),
+            node_failures=self.pool.failures,
+            recoveries=sum(int(d.get("recoveries") or 0)
+                           for d in jobs_sum.values()),
+            retries=sum(int(d.get("retries") or 0)
+                        for d in jobs_sum.values()),
+            shed_requests=sum(int(d.get("shed_requests") or 0)
+                              for d in jobs_sum.values()),
+            recovery_ticks=sum(float(d.get("recovery_ticks") or 0.0)
+                               for d in jobs_sum.values()),
         )

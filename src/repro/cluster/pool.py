@@ -52,20 +52,52 @@ class DevicePool:
         self._owner: Dict[int, str] = {}  # node id -> job name
         self._last_owner: Dict[int, str] = {}  # node id -> last lessee ever
         self.migrations = 0  # grants of a node previously leased elsewhere
+        # fault state: dead nodes never lease again; slow_node rescales a
+        # node's pst relative to its construction-time baseline
+        self._base_pst = self.pst.copy()
+        self.dead: set = set()
+        self.failures = 0
 
     # --- queries ----------------------------------------------------------
     def nodes_of(self, job: str) -> List[int]:
         return sorted(n for n, j in self._owner.items() if j == job)
 
     def free_nodes(self) -> List[int]:
-        free = [n for n in range(self.n_nodes) if n not in self._owner]
+        free = [n for n in range(self.n_nodes)
+                if n not in self._owner and n not in self.dead]
         return sorted(free, key=lambda n: (self.pst[n], n))  # fastest first
+
+    @property
+    def n_alive(self) -> int:
+        return self.n_nodes - len(self.dead)
 
     def psts_of(self, nodes: Sequence[int]) -> List[float]:
         return [float(self.pst[n]) for n in nodes]
 
     def n_leased(self) -> int:
         return len(self._owner)
+
+    # --- faults -----------------------------------------------------------
+    def fail_node(self, node: int) -> Optional[str]:
+        """Abrupt permanent loss of one node (zero grace).  Returns the
+        job that was leasing it (None if it was free or already dead) so
+        the orchestrator can run that job's recovery path."""
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"node {node} out of range [0, {self.n_nodes})")
+        if node in self.dead:
+            return None
+        self.dead.add(node)
+        self.failures += 1
+        return self._owner.pop(node, None)
+
+    def slow_node(self, node: int, factor: float) -> None:
+        """Straggler injection: node runs `factor`x its baseline per-sample
+        time from now on (factor 1.0 restores full speed)."""
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"node {node} out of range [0, {self.n_nodes})")
+        if factor <= 0:
+            raise ValueError(f"slow factor must be > 0, got {factor}")
+        self.pst[node] = self._base_pst[node] * factor
 
     # --- lease management -------------------------------------------------
     def release_all(self, job: str) -> None:
@@ -79,8 +111,8 @@ class DevicePool:
         surrendered first on shrink); grown jobs receive free nodes fastest-
         first, in dict order (callers pass priority-sorted dicts).
         """
-        if sum(alloc.values()) > self.n_nodes:
-            raise ValueError("allocation exceeds pool size")
+        if sum(alloc.values()) > self.n_alive:
+            raise ValueError("allocation exceeds live pool size")
         # drop leases of jobs absent from this allocation round
         for job in {j for j in self._owner.values()} - set(alloc):
             self.release_all(job)

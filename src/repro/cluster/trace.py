@@ -21,15 +21,22 @@ Trace format (JSON, one object per event, sorted by `at`):
 - `burst`: submit `n` extra requests to a serve job; `rate` <= 0 means an
   instantaneous burst at `at`, otherwise Poisson arrivals at `rate` req/s
   starting at `at`.  Optional fields default as in `ServeJob.make_requests`.
+- `fail`: a FAULT, distinct from the graceful `depart`.  With a `node`
+  payload it is an abrupt permanent node loss (zero grace — whatever job
+  leased the node loses its in-flight state there and runs its recovery
+  path); with only a `job` it is a zero-grace lease revocation (the job
+  keeps its chunk/slot state — Chicle preemption — but holds no nodes
+  until the allocator re-grants).
+- `slow`: node `node` becomes a `factor`x straggler (factor 1.0 clears).
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 import json
-from typing import Any, Dict, Iterable, List
+from typing import Any, Dict, Iterable, List, Optional
 
-KINDS = ("arrive", "depart", "burst")
+KINDS = ("arrive", "depart", "burst", "fail", "slow")
 
 
 @dataclasses.dataclass
@@ -114,3 +121,18 @@ def burst(at: float, job: str, n: int, *, rate: float = 0.0,
           **payload: Any) -> TraceEvent:
     return TraceEvent(at, "burst", job, {"n": int(n), "rate": float(rate),
                                          **payload})
+
+
+def fail(at: float, job: str = "", *, node: Optional[int] = None
+         ) -> TraceEvent:
+    """Node failure (`node=` given, `job` ignored for targeting — the pool
+    knows the owner) or zero-grace lease revocation of `job` (no node)."""
+    if node is None and not job:
+        raise ValueError("fail event needs a node= or a job name")
+    payload = {"node": int(node)} if node is not None else {}
+    return TraceEvent(at, "fail", job, payload)
+
+
+def slow(at: float, node: int, factor: float, *, job: str = "") -> TraceEvent:
+    return TraceEvent(at, "slow", job, {"node": int(node),
+                                        "factor": float(factor)})

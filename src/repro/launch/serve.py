@@ -21,8 +21,9 @@ from ..configs import get_config, smoke_variant
 from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
 from ..obs import Tracer, dominant_host_phase, format_attribution, \
     phase_attribution
-from ..serve import (DisaggEngine, QueueSplitPolicy, ServeEngine,
-                     poisson_arrivals, synthetic_requests)
+from ..serve import (DisaggEngine, FaultInjector, QueueSplitPolicy,
+                     ServeEngine, parse_chaos, poisson_arrivals,
+                     synthetic_requests)
 from .train import scale_config
 
 
@@ -74,7 +75,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           page_size: int = 8, spec: str = "off", spec_k: int = 4,
           prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
           disagg: bool = False, prefill_workers: Optional[int] = None,
-          split_interval: int = 4,
+          split_interval: int = 4, chaos: Optional[str] = None,
           seed: int = 0, trace_out: Optional[str] = None) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary.
     `trace_out` enables tick-phase tracing and writes a Chrome trace-event
@@ -99,6 +100,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
         policies.append(StragglerMitigationPolicy())
 
     tracer = Tracer(name=f"serve:{arch}") if trace_out else None
+    injector = (FaultInjector(parse_chaos(chaos), tracer=tracer)
+                if chaos else None)
     if disagg:
         # disagg is paged-only and splits the pool itself: the scale-event
         # schedule / policies (ServeEngine-internal elasticity) don't apply
@@ -109,6 +112,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
             split_policy=QueueSplitPolicy(interval=split_interval),
             page_size=page_size, spec=spec, spec_k=spec_k,
             prefix_share=prefix_share, evict=evict,
+            fault_injector=injector,
             seed=seed, tracer=tracer)
     else:
         engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
@@ -116,11 +120,15 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
                              policies=policies, kv_layout=kv_layout,
                              page_size=page_size, spec=spec, spec_k=spec_k,
                              prefix_share=prefix_share, evict=evict,
+                             fault_injector=injector,
                              seed=seed, tracer=tracer)
     metrics = engine.run(reqs)
     out = metrics.summarize()
     out["arch"] = arch
     out["capacity"] = capacity
+    if injector is not None:
+        out["chaos"] = chaos
+        out["faults_injected"] = injector.summary()
     if tracer is not None:
         tracer.save(trace_out)
         attr = phase_attribution(tracer)
@@ -184,6 +192,11 @@ def main() -> None:
     ap.add_argument("--split-interval", type=int, default=4,
                     help="ticks between split-policy rebalance decisions "
                          "(disagg)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault-injection spec on the tick clock, e.g. "
+                         "'crash@t=5', 'crash@t=5:prefill' (disagg pool), "
+                         "'slow@t=3:w0:2.0', 'drop@t=6', 'p_crash=0.02'; "
+                         "comma-separate multiple events")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="enable tick-phase tracing and write a Chrome "
@@ -206,8 +219,8 @@ def main() -> None:
                 prefix_share=onoff(args.prefix_share),
                 evict=onoff(args.evict), disagg=args.disagg,
                 prefill_workers=args.prefill_workers,
-                split_interval=args.split_interval, seed=args.seed,
-                trace_out=args.trace_out)
+                split_interval=args.split_interval, chaos=args.chaos,
+                seed=args.seed, trace_out=args.trace_out)
     if args.json:
         print(json.dumps(out, indent=2))
         return
@@ -235,6 +248,12 @@ def main() -> None:
         print(f"  disagg: {d['handoffs']} handoffs "
               f"({d['handoff_bytes']} bytes), splits "
               f"{d['split_events']}")
+    if "faults_injected" in out:
+        print(f"  chaos: injected {out['faults_injected']}; "
+              f"{out['recoveries']} recoveries "
+              f"(mean {out['recovery_ticks_mean'] or 0:.1f} ticks), "
+              f"{out['retries_total']} retries, "
+              f"{out['shed_requests']} shed")
     if "attribution" in out:
         print(f"  trace written to {out['trace_out']}; tick-time "
               f"attribution (dominant host phase: "

@@ -39,6 +39,8 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 re-prefill) and a per-tick `SplitPolicy` rebalancing the
                 prefill:decode worker split from observed queue depths
 """
+from ..faults import (FaultEvent, FaultInjector, FaultPlan, handoff_drop,
+                      parse_chaos, worker_crash, worker_slow)
 from .disagg import (DisaggEngine, DisaggMetrics, QueueSplitPolicy,
                      ScheduledSplitPolicy, SplitObs, SplitPolicy)
 from .engine import ServeEngine, ServeMetrics
@@ -51,10 +53,12 @@ from .slots import SlotPool
 from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 __all__ = [
-    "DisaggEngine", "DisaggMetrics", "DraftModelDrafter", "KVMemoryManager",
-    "NgramDrafter", "PageAllocator", "PageError", "ParkedSeq",
-    "QueueSplitPolicy", "Request", "RequestState", "RestorePlan",
-    "ScheduledSplitPolicy", "ServeEngine", "ServeMetrics", "SlotPool",
-    "SlotScheduler", "SplitObs", "SplitPolicy", "greedy_accept",
+    "DisaggEngine", "DisaggMetrics", "DraftModelDrafter", "FaultEvent",
+    "FaultInjector", "FaultPlan", "KVMemoryManager", "NgramDrafter",
+    "PageAllocator", "PageError", "ParkedSeq", "QueueSplitPolicy",
+    "Request", "RequestState", "RestorePlan", "ScheduledSplitPolicy",
+    "ServeEngine", "ServeMetrics", "SlotPool", "SlotScheduler", "SplitObs",
+    "SplitPolicy", "greedy_accept", "handoff_drop", "parse_chaos",
     "poisson_arrivals", "synthetic_requests", "trace_arrivals",
+    "worker_crash", "worker_slow",
 ]

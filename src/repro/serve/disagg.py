@@ -44,11 +44,12 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..compat import set_mesh
 from ..configs.base import ModelConfig
+from ..faults import FaultEvent, FaultInjector
 from ..obs import NULL_TRACER, ScopedTracer, Tracer
 from .engine import ServeEngine, ServeMetrics
 from .memory import ParkedSeq
 from .pages import PageError
-from .request import Request
+from .request import Request, RequestState
 
 
 # ---------------------------------------------------------------------------
@@ -147,8 +148,12 @@ class DisaggMetrics:
     decode: ServeMetrics
     handoffs: int = 0
     handoff_bytes: int = 0
+    handoff_drops: int = 0  # injected in-flight transfer losses
+    handoff_retries: int = 0  # dropped payloads re-sent from the parked copy
     split_events: List[Tuple[int, int, int]] = dataclasses.field(
         default_factory=list)  # (tick, prefill_workers, decode_workers)
+    degraded_events: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)  # (tick, "enter:<why>" | "exit")
     wall_s: float = 0.0
 
     @property
@@ -164,9 +169,14 @@ class DisaggMetrics:
         return list(seen.values())
 
     def combined(self, wall_s: Optional[float] = None) -> ServeMetrics:
-        return ServeMetrics(requests=self.requests,
-                            ticks=self.prefill.ticks + self.decode.ticks,
-                            wall_s=self.wall_s if wall_s is None else wall_s)
+        return ServeMetrics(
+            requests=self.requests,
+            ticks=self.prefill.ticks + self.decode.ticks,
+            fault_events=self.prefill.fault_events
+            + self.decode.fault_events,
+            recovery_events=self.prefill.recovery_events
+            + self.decode.recovery_events,
+            wall_s=self.wall_s if wall_s is None else wall_s)
 
     def summarize(self, wall_s: Optional[float] = None) -> Dict[str, Any]:
         w = self.wall_s if wall_s is None else wall_s
@@ -179,7 +189,10 @@ class DisaggMetrics:
         out["disagg"] = {
             "handoffs": self.handoffs,
             "handoff_bytes": self.handoff_bytes,
+            "handoff_drops": self.handoff_drops,
+            "handoff_retries": self.handoff_retries,
             "split_events": [list(e) for e in self.split_events],
+            "degraded_events": [list(e) for e in self.degraded_events],
             **halves,
         }
         return out
@@ -225,16 +238,27 @@ class DisaggEngine:
                  seed: int = 0, params: Optional[Any] = None,
                  clock: Optional[Any] = None,
                  debug_checks: bool = False,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_backoff: int = 1,
                  tracer: Optional[Tracer] = None):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.cfg = cfg
         self.cache_len = cache_len
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.split_policy = split_policy
         self.debug_checks = debug_checks
-        self.total_workers = max(1, int(n_workers))
-        kp = (int(prefill_workers) if prefill_workers is not None
-              else max(1, self.total_workers // 2))
-        kp = min(max(kp, 1), max(self.total_workers - 1, 1))
+        self.total_workers = int(n_workers)
+        if prefill_workers is not None:
+            kp = int(prefill_workers)
+            hi = max(self.total_workers - 1, 1)
+            if not 1 <= kp <= hi:
+                raise ValueError(
+                    f"prefill_workers must be in [1, {hi}] so the decode "
+                    f"pool keeps at least one worker (n_workers="
+                    f"{self.total_workers}); got {kp}")
+        else:
+            kp = max(1, self.total_workers // 2)
         kd = max(self.total_workers - kp, 1)
 
         # both halves share ONE clock so TTFT (stamped by the prefill half)
@@ -261,7 +285,8 @@ class DisaggEngine:
             # would only churn mid-prefill state — keep handoff the one
             # park path on this half
             evict=False, spec="off", decode_enabled=False,
-            debug_checks=debug_checks, tracer=scoped("prefill_pool"))
+            debug_checks=debug_checks, retry_backoff=retry_backoff,
+            tracer=scoped("prefill_pool"))
         self.decode = ServeEngine(
             cfg, capacity=capacity, cache_len=cache_len,
             prefill_bucket=prefill_bucket, n_workers=kd,
@@ -275,8 +300,14 @@ class DisaggEngine:
             prefix_share=prefix_share, evict=evict,
             spec=spec, spec_k=spec_k, drafter=drafter, draft_cfg=draft_cfg,
             draft_params=draft_params, debug_checks=debug_checks,
-            tracer=scoped("decode_pool"))
+            retry_backoff=retry_backoff, tracer=scoped("decode_pool"))
 
+        # the DISAGG engine owns the injector (the halves get none): pool
+        # routing and handoff drops only make sense at this level
+        self.fault_injector = fault_injector
+        self.degraded = False
+        self._drop_pending = 0  # armed handoff_drop faults
+        self._handoff_retry: List[Tuple[Request, ParkedSeq]] = []
         self._handoff: Deque[Tuple[Request, ParkedSeq]] = deque()
         self.metrics = DisaggMetrics(prefill=self.prefill.metrics,
                                      decode=self.decode.metrics)
@@ -315,8 +346,21 @@ class DisaggEngine:
     def resize(self, k: int) -> None:
         """Elastic resize of the TOTAL worker count (the cluster lease
         hook); the current prefill:decode ratio is preserved and the split
-        policy re-optimizes from there."""
-        k = max(1, int(k))
+        policy re-optimizes from there.  A resize to k >= 2 while degraded
+        (one pool had lost all its workers) re-splits the pools and exits
+        degraded mode — capacity returned, disaggregation resumes."""
+        if k < 1:
+            raise ValueError(
+                f"resize(k) needs at least one worker, got k={k}; to stop "
+                f"serving use suspend(), not a zero-worker resize")
+        k = int(k)
+        if self.degraded:
+            self.total_workers = k
+            if k >= 2:
+                self._exit_degraded()
+            else:
+                self.decode.resize(k)
+            return
         frac = self.prefill.k / max(self.prefill.k + self.decode.k, 1)
         self.total_workers = k
         kp = 1 if k == 1 else min(max(int(round(frac * k)), 1), k - 1)
@@ -356,6 +400,118 @@ class DisaggEngine:
                                   decode_backlog=obs.decode_backlog_tokens):
                 self._apply_split(kp)
 
+    # --- fault injection + degraded mode ----------------------------------
+    def apply_fault(self, ev: FaultEvent) -> None:
+        """Route one injected fault.  `payload["pool"]` picks the half for
+        crash/slow ("prefill" / "decode"; default decode — the pool with
+        long-lived state).  revoke_lease is cluster scope, ignored here."""
+        pool = ev.payload.get("pool", "decode")
+        if pool not in ("prefill", "decode"):
+            raise ValueError(f"fault pool must be 'prefill' or 'decode', "
+                             f"got {pool!r}")
+        eng = self.prefill if pool == "prefill" else self.decode
+        if ev.kind == "worker_crash":
+            target = None if ev.target is None else int(ev.target)
+            if self.degraded:
+                # already monolithic: a further crash hits the one pool,
+                # which cold-replaces at k=1 like a monolithic engine
+                self.decode.crash_worker(target)
+                self.total_workers = self.decode.k
+            elif eng.k <= 1:
+                # the pool just lost its LAST worker: collapse to
+                # monolithic serving on the survivors
+                self._pool_lost(pool, target)
+            else:
+                eng.crash_worker(target)
+                self.total_workers = self.prefill.k + self.decode.k
+        elif ev.kind == "worker_slow":
+            w = eng.k - 1 if ev.target is None else int(ev.target)
+            eng.set_worker_slow(w, ev.factor)
+        elif ev.kind == "handoff_drop":
+            self._drop_pending += 1
+
+    def _restart_into_decode(self, reqs: Sequence[Request]) -> None:
+        """Crash-restart a batch of requests into the decode half: streams
+        reset (greedy re-execution is bit-equal), retry budgets charged,
+        backoff on the decode tick clock."""
+        d = self.decode
+        now = self._now()
+        for req in reqs:
+            req.slot = None
+            req.generated = []
+            req.t_first_token = None
+            req.retries += 1
+            if req.retries > req.max_retries:
+                d._shed(req, now, reason="retries")
+            else:
+                req.state = RequestState.RETRYING
+                ready = d._tick + d.retry_backoff * (1 << (req.retries - 1))
+                d._retrying.append((ready, req))
+                d._tick_faults["retries"] += 1
+                d.tracer.count("serve.retries_total")
+
+    def _pool_lost(self, pool: str, worker: Optional[int]) -> None:
+        """One pool lost its last worker: collapse to MONOLITHIC serving on
+        the decode engine (the full-featured half — it can prefill and
+        decode).  Queued and retrying work re-routes there; a prefill-pool
+        loss restarts its in-flight slots (their KV died), a decode-pool
+        loss hands completed prefills off normally (their KV lives on the
+        surviving prefill workers) and restarts only mid-prefill slots."""
+        p, d = self.prefill, self.decode
+        self.degraded = True
+        self.metrics.degraded_events.append((self._tick, "enter:" + pool))
+        self.tracer.instant("degraded.enter", track="faults", pool=pool,
+                            tick=self._tick)
+        self.tracer.count("serve.degraded_events")
+        with self.tracer.span("recovery.degrade", track="faults", pool=pool):
+            if pool == "prefill":
+                # every slot resident on the dying pool is lost; the engine
+                # books the crash, then its retry queue moves to decode
+                p.crash_worker(worker)
+                d._retrying.extend(
+                    (d._tick + d.retry_backoff, r) for _, r in p._retrying)
+                p._retrying = []
+                survivors = d.k
+            else:
+                d.crash_worker(worker)  # cold drop of the decode residents
+                # completed prefills survive on the prefill workers: one
+                # last handoff preserves their KV bit-for-bit
+                self._drain_prefilled()
+                # mid-prefill slots can't hand off (pages partial): release
+                # their pages and restart them in the monolithic pool
+                lost = []
+                for slot in sorted(p._prefilling):
+                    req, _off = p._prefilling.pop(slot)
+                    p.mem.release_slot(slot)
+                    p.scheduler.pool.free(slot)
+                    lost.append(req)
+                self._restart_into_decode(lost)
+                survivors = p.k
+            # recovery windows ride along so they close when the victims
+            # re-admit in the monolithic pool
+            d._recovering.extend(p._recovering)
+            p._recovering = []
+            # queued admissions re-route to the monolithic half
+            pending = p.scheduler.pending
+            p.scheduler._queues.clear()
+            for r in pending:
+                d.scheduler.submit(r)
+            # the monolithic pool re-forms over the surviving worker count
+            if d.k != max(1, survivors):
+                d.resize(max(1, survivors))
+        self.total_workers = d.k
+        self._note_split(0, d.k)
+
+    def _exit_degraded(self) -> None:
+        """Capacity returned (resize k >= 2): re-split the pools and route
+        new admissions through the prefill half again.  Requests already in
+        the decode half finish there."""
+        self.degraded = False
+        self.metrics.degraded_events.append((self._tick, "exit"))
+        self.tracer.instant("degraded.exit", track="faults", tick=self._tick)
+        kp = max(1, self.total_workers // 2)
+        self._apply_split(kp)
+
     # --- handoff ----------------------------------------------------------
     def _drain_prefilled(self) -> int:
         """Extract every slot the prefill pool finished this tick: park its
@@ -382,6 +538,18 @@ class DisaggEngine:
         n = 0
         while self._handoff:
             req, seq = self._handoff.popleft()
+            if self._drop_pending > 0:
+                # injected transfer loss: the in-flight copy vanishes, but
+                # the payload object IS the source pool's parked copy (host
+                # memory, self-contained) — it re-sends next tick, so the
+                # request is neither lost nor duplicated (exactly-once)
+                self._drop_pending -= 1
+                self.metrics.handoff_drops += 1
+                self.tracer.instant("handoff.drop", track="handoff",
+                                    rid=req.rid)
+                self.tracer.count("serve.handoff_drops")
+                self._handoff_retry.append((req, seq))
+                continue
             with self.tracer.span("handoff.inject", rid=req.rid,
                                   nbytes=seq.nbytes):
                 self.decode.inject(req, seq)
@@ -415,19 +583,26 @@ class DisaggEngine:
     def drained(self) -> bool:
         p, d = self.prefill, self.decode
         return not (p.scheduler.has_pending or p._by_slot or p._prefilling
-                    or self._handoff
+                    or p._retrying or self._handoff or self._handoff_retry
                     or d.scheduler.has_pending or d._by_slot
-                    or d._prefilling)
+                    or d._prefilling or d._retrying)
 
     def submit(self, requests: Sequence[Request]) -> None:
-        """All requests enter through the prefill pool."""
-        self.prefill.submit(requests)
+        """All requests enter through the prefill pool — unless it lost
+        its workers (degraded mode), in which case the decode half serves
+        monolithically and admits directly."""
+        if self.degraded:
+            self.decode.submit(requests)
+        else:
+            self.prefill.submit(requests)
 
     def check(self) -> None:
         """Cross-boundary page-leak guard, on top of each half's own
         per-tick invariant checks: after a tick every extracted payload
         must have moved on (nothing parked on the prefill side, no
-        request parked on both sides)."""
+        request parked on both sides).  Payloads in `_handoff_retry` are
+        exempt: an injected handoff_drop parks them for exactly one tick
+        before the retry re-send."""
         if self.prefill.mem.n_parked:
             raise PageError("prefill pool retains parked payloads after "
                             "the handoff drain")
@@ -439,9 +614,23 @@ class DisaggEngine:
         if self.suspended:
             raise RuntimeError("DisaggEngine is suspended; call resume() "
                                "before ticking")
-        self._maybe_rebalance()
+        # fault phase first (fixed order, same contract as ServeEngine)
+        if self.fault_injector is not None:
+            for ev in self.fault_injector.poll(self._tick):
+                self.apply_fault(ev)
+        if self._handoff_retry:
+            # dropped transfers re-send from the parked copy, ahead of any
+            # payload extracted this tick (FCFS preserved)
+            self.metrics.handoff_retries += len(self._handoff_retry)
+            self.tracer.count("serve.handoff_retries",
+                              len(self._handoff_retry))
+            self._handoff.extendleft(reversed(self._handoff_retry))
+            self._handoff_retry = []
+        if not self.degraded:
+            self._maybe_rebalance()
         p, d = self.prefill, self.decode
-        if p.scheduler.has_pending or p._by_slot or p._prefilling:
+        if p.scheduler.has_pending or p._by_slot or p._prefilling \
+                or p._retrying:
             t0 = time.perf_counter()
             with set_mesh(p.mesh):
                 p.tick()
@@ -450,7 +639,8 @@ class DisaggEngine:
                 0.5 * self._ema_p + 0.5 * dt
         self._drain_prefilled()
         self._inject_ready()
-        if d.scheduler.has_pending or d._by_slot or d._prefilling:
+        if d.scheduler.has_pending or d._by_slot or d._prefilling \
+                or d._retrying:
             t0 = time.perf_counter()
             with set_mesh(d.mesh):
                 d.tick()
@@ -487,7 +677,9 @@ class DisaggEngine:
         self._now()  # start the shared clock
         while not self.drained and self._tick < max_ticks:
             busy = (self.prefill._by_slot or self.prefill._prefilling
-                    or self.decode._by_slot or self._handoff)
+                    or self.decode._by_slot or self._handoff
+                    or self._handoff_retry or self.prefill._retrying
+                    or self.decode._retrying)
             if not busy:
                 nxts = [t for t in (self.prefill.scheduler.next_arrival(),
                                     self.decode.scheduler.next_arrival())

@@ -52,6 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
+from ..faults import FaultEvent, FaultInjector
 from ..models import model as M
 from ..obs import MetricsRegistry, NULL_TRACER, Tracer
 from ..sharding import AxisRules
@@ -90,6 +91,10 @@ class TickRecord:
     restored: int = 0  # parked slots restored this tick
     kv_moved_bytes: int = 0  # park + restore bytes moved (host <-> device)
     shared_extra_pages: int = 0  # pages saved by sharing, end of tick
+    # fault/recovery accounting (crash_worker + deadline shedding)
+    crashes: int = 0  # worker-crash faults applied this tick
+    retries: int = 0  # victim requests re-queued for re-execution this tick
+    shed: int = 0  # requests expired this tick (retry budget / deadline)
 
 
 @dataclasses.dataclass
@@ -104,6 +109,10 @@ class ServeMetrics:
         default_factory=list)  # (tick, k_after, slots_moved, bytes_moved)
     jit_cache_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
     kv_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    fault_events: List[Tuple[int, str, Any]] = dataclasses.field(
+        default_factory=list)  # (tick, kind, target)
+    recovery_events: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)  # (crash_tick, recovery_ticks, n_victims)
     wall_s: float = 0.0
 
     def to_registry(self, registry: Optional[MetricsRegistry] = None
@@ -150,6 +159,9 @@ class ServeMetrics:
             "serve.parked": "parked",
             "serve.restored": "restored",
             "serve.kv_moved_bytes": "kv_moved_bytes",
+            "serve.retries_total": "retries",
+            "serve.shed_requests": "shed",
+            "serve.crashes": "crashes",
         }
         for metric, field in per_tick.items():
             reg.counter(metric).inc(
@@ -158,6 +170,11 @@ class ServeMetrics:
             sum(1 for t in self.ticks if t.tokens_emitted))
         reg.counter("serve.resize_moved_bytes").inc(
             sum(m[3] for m in self.resize_moves))
+        # one recovery = one crash's victim cohort fully re-admitted or shed
+        reg.counter("serve.recoveries").inc(len(self.recovery_events))
+        h_rec = reg.histogram("serve.recovery_ticks")
+        for _, rticks, _ in self.recovery_events:
+            h_rec.observe(rticks)
         h_occ = reg.histogram("serve.occupancy")
         h_pocc = reg.histogram("serve.page_occupancy")
         h_shx = reg.histogram("serve.shared_extra_pages")
@@ -223,6 +240,13 @@ class ServeMetrics:
             "kv_moved_bytes_total": cnt("serve.kv_moved_bytes"),
             "shared_extra_pages_mean": mean("serve.shared_extra_pages"),
             "resize_moved_bytes_total": cnt("serve.resize_moved_bytes"),
+            # fault tolerance: crash recoveries, re-executions, load shed
+            "recoveries": cnt("serve.recoveries"),
+            "retries_total": cnt("serve.retries_total"),
+            "shed_requests": cnt("serve.shed_requests"),
+            "crashes_total": cnt("serve.crashes"),
+            "recovery_ticks_mean": hist("serve.recovery_ticks").mean,
+            "recovery_events": [list(e) for e in self.recovery_events],
             "kv_stats": dict(self.kv_stats),
             "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
@@ -276,6 +300,8 @@ class ServeEngine:
                  draft_params: Optional[Any] = None,
                  debug_checks: bool = False,
                  decode_enabled: bool = True,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_backoff: int = 1,
                  tracer: Optional[Tracer] = None,
                  max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
@@ -285,6 +311,13 @@ class ServeEngine:
         if kv_layout not in ("flat", "paged"):
             raise ValueError(f"kv_layout must be 'flat' or 'paged', "
                              f"got {kv_layout!r}")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1 decode slot, "
+                             f"got {capacity}")
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if cache_len < 1:
+            raise ValueError(f"cache_len must be >= 1 token, got {cache_len}")
         if spec not in ("off", "ngram", "draft"):
             raise ValueError(f"spec must be 'off', 'ngram' or 'draft', "
                              f"got {spec!r}")
@@ -319,6 +352,12 @@ class ServeEngine:
             raise ValueError("chunked_prefill requires kv_layout='paged' "
                              "(chunks append to pages in place)")
         if kv_layout == "paged":
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if cache_len < page_size:
+                raise ValueError(
+                    f"zero-page budget: cache_len {cache_len} < page_size "
+                    f"{page_size} gives every slot 0 KV pages")
             if cache_len % page_size or prefill_bucket % page_size:
                 raise ValueError("cache_len and prefill_bucket must be "
                                  "multiples of page_size")
@@ -408,6 +447,15 @@ class ServeEngine:
         self._kv_prev = self.mem.stats() if self.mem is not None else None
         self._by_slot: Dict[int, Request] = {}
         self._prefilling: Dict[int, Tuple[Request, int]] = {}  # slot -> (req, off)
+        # fault tolerance: injector polled at the top of every tick; crash
+        # victims wait host-side in _retrying (ready_tick, req) until their
+        # exponential backoff expires, then re-queue through the scheduler
+        self.fault_injector = fault_injector
+        self.retry_backoff = max(1, int(retry_backoff))
+        self._retrying: List[Tuple[int, Request]] = []
+        self._slow_factors: Dict[int, float] = {}
+        self._recovering: List[Dict[str, Any]] = []
+        self._tick_faults = {"crashes": 0, "retries": 0, "shed": 0}
         self.metrics = ServeMetrics()
         self._tick = 0
         self._t0: Optional[float] = None
@@ -548,7 +596,10 @@ class ServeEngine:
         mesh itself changes, the single pool array is re-laid-out by
         `device_put`; the accounting tracks the algorithmic cost that a
         per-worker page-pool runtime would pay.)"""
-        k = max(1, k)
+        if k < 1:
+            raise ValueError(
+                f"resize(k) needs at least one worker, got k={k}; to stop "
+                f"serving use suspend(), not a zero-worker resize")
         if self.scheduler.n_workers != k:
             live, before = self._slot_workers()
             self.scheduler.set_workers(k)
@@ -805,6 +856,159 @@ class ServeEngine:
             self.scheduler.pool.pos[req.slot] = seq.live_tokens
             self._by_slot[req.slot] = req
         return plan.moved_bytes
+
+    # --- fault injection + crash recovery ---------------------------------
+    def apply_fault(self, ev: FaultEvent) -> None:
+        """Route one injected fault.  Serve-level kinds only: revoke_lease
+        is cluster scope and handoff_drop is disagg scope — both are
+        ignored here so one FaultPlan can span all three layers."""
+        if ev.kind == "worker_crash":
+            self.crash_worker(ev.target if ev.target is None
+                              else int(ev.target))
+        elif ev.kind == "worker_slow":
+            w = self.k - 1 if ev.target is None else int(ev.target)
+            self.set_worker_slow(w, ev.factor)
+
+    def set_worker_slow(self, worker: int, factor: float) -> None:
+        """Straggler injection: `worker`'s modeled task time scales by
+        `factor` until cleared with factor 1.0 — feeds the same per-worker
+        timing stats `StragglerMitigationPolicy` watches."""
+        if factor == 1.0:
+            self._slow_factors.pop(worker, None)
+        else:
+            self._slow_factors[worker] = float(factor)
+        self.metrics.fault_events.append((self._tick, "worker_slow", worker))
+
+    def crash_worker(self, worker: Optional[int] = None) -> List[Request]:
+        """Abrupt zero-grace loss of one logical worker (default: the
+        highest-id live worker): every KV page and slot resident on it is
+        gone.  Victim requests (mid-prefill and mid-decode alike) restart
+        from the prompt — greedy decode is deterministic, so a re-executed
+        stream is bit-equal to a fault-free run's — re-queueing through
+        RETRYING with exponential backoff, or shedding to EXPIRED once the
+        retry budget is blown.  The pool shrinks to the survivors via the
+        normal `resize` path (a k=1 crash cold-starts a replacement worker:
+        all resident KV was already dropped).  Returns the victims."""
+        sched = self.scheduler
+        if worker is None:
+            worker = sched.n_workers - 1
+        if not 0 <= worker < sched.n_workers:
+            raise ValueError(f"crash_worker: worker {worker} not in live "
+                             f"set 0..{sched.n_workers - 1}")
+        now = self._now()
+        self.metrics.fault_events.append((self._tick, "worker_crash", worker))
+        self._tick_faults["crashes"] += 1
+        with self.tracer.span("recovery.crash", track="faults",
+                              worker=worker):
+            victims: List[Request] = []
+            for slot in sched.slots_of_worker(worker):
+                req = self._by_slot.pop(slot, None)
+                if req is None:
+                    ent = self._prefilling.pop(slot, None)
+                    req = ent[0] if ent is not None else None
+                if req is None:
+                    continue
+                # the dead worker's pages are unreachable: free them and
+                # invalidate prefix-index entries that pointed at them
+                # (host-parked payloads are self-contained copies and
+                # survive untouched)
+                if self.mem is not None:
+                    self.mem.release_slot(slot)
+                sched.pool.free(slot)
+                req.slot = None
+                victims.append(req)
+            for req in victims:
+                req.generated = []
+                req.t_first_token = None
+                req.retries += 1
+                if req.retries > req.max_retries:
+                    self._shed(req, now, reason="retries")
+                else:
+                    req.state = RequestState.RETRYING
+                    ready = self._tick + self.retry_backoff \
+                        * (1 << (req.retries - 1))
+                    self._retrying.append((ready, req))
+                    self._tick_faults["retries"] += 1
+                    self.tracer.count("serve.retries_total")
+            if victims:
+                self._recovering.append(
+                    {"tick": self._tick, "n": len(victims),
+                     "pending": {r.rid: r for r in victims}})
+            self.resize(max(1, self.k - 1))
+            # logical workers renumber on shrink: factors past the new k
+            # die with their worker ids
+            self._slow_factors = {w: f for w, f in self._slow_factors.items()
+                                  if w < self.k}
+        return victims
+
+    def _shed(self, req: Request, now: float, *, reason: str) -> None:
+        """Terminal load shed: EXPIRED, never re-queued.  Any parked host
+        payload is dropped (not leaked), any held slot/pages released."""
+        if self.mem is not None and self.mem.has_parked(req.rid):
+            self.mem.take_parked(req.rid)
+        if req.slot is not None:
+            if self.mem is not None:
+                self.mem.release_slot(req.slot)
+            self.scheduler.pool.free(req.slot)
+            req.slot = None
+        req.state = RequestState.EXPIRED
+        req.t_finished = now
+        self._tick_faults["shed"] += 1
+        self.tracer.instant("shed", track="faults", rid=req.rid,
+                            reason=reason)
+        self.tracer.count("serve.shed_requests")
+
+    def _requeue_retries(self) -> None:
+        """Move backoff-expired crash victims back into the admission
+        queue; their original arrival time keeps them near the front of
+        their tenant's FCFS queue."""
+        due = [ent for ent in self._retrying if ent[0] <= self._tick]
+        if not due:
+            return
+        self._retrying = [ent for ent in self._retrying
+                          if ent[0] > self._tick]
+        with self.tracer.span("recovery.requeue", track="faults",
+                              n=len(due)):
+            for _, req in due:
+                req.state = RequestState.QUEUED
+                self.scheduler.submit(req)
+
+    def _shed_expired(self, now: float) -> None:
+        """Deadline-based shedding: queued or retrying requests past their
+        deadline are EXPIRED instead of (re-)admitted.  In-flight decodes
+        run to completion — admission is the shedding point."""
+        for req in self.scheduler.shed_expired(now):
+            self._shed(req, now, reason="deadline")
+        keep: List[Tuple[int, Request]] = []
+        for rdy, req in self._retrying:
+            if req.deadline is not None \
+                    and now - req.arrival_time > req.deadline:
+                self._shed(req, now, reason="deadline")
+            else:
+                keep.append((rdy, req))
+        self._retrying = keep
+
+    def _settle_recoveries(self) -> None:
+        """Close recovery windows: a crash's victim cohort is recovered
+        when every victim has re-emitted its first token or been shed;
+        the window's tick count is the recovery latency."""
+        still: List[Dict[str, Any]] = []
+        for rec in self._recovering:
+            rec["pending"] = {
+                rid: r for rid, r in rec["pending"].items()
+                if not (r.state is RequestState.EXPIRED
+                        or (r.n_generated > 0
+                            and r.state in (RequestState.DECODING,
+                                            RequestState.FINISHED)))}
+            if rec["pending"]:
+                still.append(rec)
+            else:
+                rticks = self._tick - rec["tick"]
+                self.metrics.recovery_events.append(
+                    (rec["tick"], rticks, rec["n"]))
+                self.tracer.instant("recovery.done", track="faults",
+                                    crash_tick=rec["tick"], ticks=rticks)
+        self._recovering = still
 
     def _start_decoding(self, req: Request, nxt: int, now: float) -> None:
         """Common PREFILL -> DECODING (or immediate finish) transition once
@@ -1157,6 +1361,16 @@ class ServeEngine:
         trc = self.tracer
         tick_t0 = time.perf_counter() if trc.enabled else 0.0
 
+        # ---- fault phase: injected faults land BEFORE the scheduler so a
+        # crash on the same tick as a scale event has a fixed, replayable
+        # order (crash -> retry requeue -> deadline shed -> policies) ----
+        if self.fault_injector is not None:
+            for ev in self.fault_injector.poll(self._tick):
+                self.apply_fault(ev)
+        if self._retrying:
+            self._requeue_retries()
+        self._shed_expired(now)
+
         # ---- scheduler phase: policies may rescale/rebalance the pool ----
         with trc.span("schedule", k=sched.n_workers):
             stats: Dict = dict(self._last_stats)
@@ -1267,12 +1481,16 @@ class ServeEngine:
         # feedback loop as training (load-proportional split of the step)
         loads = sched.active_per_worker()
         total = max(int(loads.sum()), 1)
+        # injected stragglers inflate their worker's modeled share so the
+        # mitigation policy sees them exactly like an organic slow worker
+        slow = self._slow_factors
         self._last_stats = {
-            "task_times": {w: t_step * loads[w] / total
+            "task_times": {w: t_step * loads[w] / total * slow.get(w, 1.0)
                            for w in range(sched.n_workers)},
-            "per_sample_times": {w: t_step / total
+            "per_sample_times": {w: t_step / total * slow.get(w, 1.0)
                                  for w in range(sched.n_workers)},
         }
+        self._settle_recoveries()
 
         self._stamp_cache_sizes()
         kv = {}
@@ -1302,7 +1520,11 @@ class ServeEngine:
                          page_occupancy=(self.pages.occupancy()
                                          if self.pages else 0.0),
                          spec_drafted=drafted, spec_accepted=accepted,
-                         draft_dispatches=draft_disp, **kv)
+                         draft_dispatches=draft_disp,
+                         crashes=self._tick_faults["crashes"],
+                         retries=self._tick_faults["retries"],
+                         shed=self._tick_faults["shed"], **kv)
+        self._tick_faults = {"crashes": 0, "retries": 0, "shed": 0}
         self.metrics.ticks.append(rec)
         if trc.enabled:
             trc.count("serve.ticks")
@@ -1323,7 +1545,8 @@ class ServeEngine:
         self.submit(requests)
         self._now()  # start the clock
         sched = self.scheduler
-        while ((sched.has_pending or self._by_slot or self._prefilling)
+        while ((sched.has_pending or self._by_slot or self._prefilling
+                or self._retrying)
                and self._tick < max_ticks):
             if not self._by_slot and not self._prefilling and sched.has_pending:
                 wait = sched.next_arrival() - self._now()

@@ -4,6 +4,12 @@ A `Request` moves QUEUED -> PREFILL -> DECODING -> FINISHED.  Arrivals are
 open-loop (the workload does not wait for completions): a Poisson process,
 an explicit trace of arrival offsets, or a burst (all at t=0).  Per-request
 timestamps feed the engine's TTFT / per-token latency metrics.
+
+Two fault-path states branch off the happy path: a request whose KV died
+with a crashed worker goes RETRYING (its stream resets and it re-queues
+after an exponential backoff, up to `max_retries`), and a request that
+blows its retry budget or its `deadline` goes EXPIRED — a terminal
+load-shed state distinct from FINISHED.
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODING = "decoding"
     PARKED = "parked"  # preempted mid-decode; KV parked host-side
+    RETRYING = "retrying"  # lost to a worker crash; backing off to re-queue
     FINISHED = "finished"
+    EXPIRED = "expired"  # shed: retry budget or deadline exhausted (terminal)
 
 
 @dataclasses.dataclass
@@ -32,6 +40,12 @@ class Request:
     arrival_time: float = 0.0  # seconds from workload start (open loop)
     tenant: str = "default"  # admission queue key (per-tenant fair sharing)
     priority: int = 0  # higher may preempt (park) lower in-flight decodes
+    # fault tolerance: deadline is seconds-from-start past which a still-
+    # unfinished request is shed (None = no deadline); max_retries bounds
+    # crash re-executions before the request is shed instead
+    deadline: Optional[float] = None
+    max_retries: int = 3
+    retries: int = 0
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None

@@ -200,6 +200,25 @@ class SlotScheduler:
             admitted.append(req)
         return admitted
 
+    def shed_expired(self, now: float) -> List[Request]:
+        """Pop queued requests whose deadline has passed (deadline-based
+        load shedding happens at admission, so in-flight decodes are never
+        killed).  The engine marks the returned requests EXPIRED."""
+        out: List[Request] = []
+        for tenant in list(self._queues):
+            keep: List[Request] = []
+            for r in self._queues[tenant]:
+                if r.deadline is not None \
+                        and now - r.arrival_time > r.deadline:
+                    out.append(r)
+                else:
+                    keep.append(r)
+            if keep:
+                self._queues[tenant] = keep
+            else:
+                del self._queues[tenant]
+        return out
+
     def release(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED
         req.t_finished = now

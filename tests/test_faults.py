@@ -1,0 +1,364 @@
+"""Fault-injection + crash-consistent recovery tests: bit-equal re-execution
+after abrupt worker loss (flat and paged, mid-chunked-prefill, same-tick as
+a resize), retry budgets and deadline shedding, seeded fault determinism,
+disagg handoff drops (exactly-once) and degraded-mode collapse/re-split,
+cluster node-failure routing with checkpoint rollback, and the input-
+validation hardening on engine construction/resize."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import ElasticScalingPolicy, ScaleEvent
+from repro.faults import (FaultEvent, FaultInjector, FaultPlan, handoff_drop,
+                          parse_chaos, worker_crash, worker_slow)
+from repro.serve import (DisaggEngine, RequestState, ServeEngine,
+                         synthetic_requests)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_variant(get_config("smollm-360m"))
+
+
+def _burst(cfg, n=8, seed=0, prompt=(6, 16), max_new=(5, 9), **kw):
+    return synthetic_requests(n, vocab_size=cfg.vocab_size,
+                              arrivals=np.zeros(n), prompt_len=prompt,
+                              max_new_tokens=max_new,
+                              rng=np.random.default_rng(seed), **kw)
+
+
+def _streams(metrics, *, finished_only=False):
+    return {r.rid: tuple(r.generated) for r in metrics.requests
+            if not finished_only or r.state is RequestState.FINISHED}
+
+
+def _oracle(cfg, reqs, **kw):
+    return _streams(ServeEngine(cfg, kv_layout="flat", **kw).run(reqs))
+
+
+KW = dict(capacity=4, cache_len=32, prefill_bucket=8, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: bit-equal re-execution
+# ---------------------------------------------------------------------------
+
+
+def test_paged_crash_recovery_bit_equal(cfg):
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([worker_crash(3)]))
+    eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                      fault_injector=inj, debug_checks=True, **KW)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want
+    s = m.summarize()
+    assert s["crashes_total"] == 1
+    assert s["recoveries"] == 1
+    assert s["retries_total"] >= 1
+    assert s["shed_requests"] == 0
+    assert s["recovery_ticks_mean"] > 0
+    assert eng.k == 1  # shrank by the crashed worker
+
+
+def test_flat_layout_crash_recovery(cfg):
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([worker_crash(2)]))
+    eng = ServeEngine(cfg, kv_layout="flat", n_workers=2,
+                      fault_injector=inj, **KW)
+    assert _streams(eng.run(_burst(cfg))) == want
+
+
+def test_crash_mid_chunked_prefill_bit_equal(cfg):
+    """A crash while prompts are mid-chunked-prefill must restart them
+    cleanly (no partial KV survives, no page leaks)."""
+    reqs = _burst(cfg, n=4, prompt=(40, 60), max_new=(3, 5))
+    want = _oracle(cfg, _burst(cfg, n=4, prompt=(40, 60), max_new=(3, 5)),
+                   n_workers=1, capacity=4, cache_len=96, prefill_bucket=8,
+                   seed=0)
+    inj = FaultInjector(FaultPlan([worker_crash(1)]))
+    eng = ServeEngine(cfg, kv_layout="paged", n_workers=2, capacity=4,
+                      cache_len=96, prefill_bucket=8, prefill_chunk=8,
+                      fault_injector=inj, debug_checks=True, seed=0)
+    m = eng.run(reqs)
+    assert _streams(m) == want
+    assert m.summarize()["crashes_total"] == 1
+
+
+def test_crash_same_tick_as_resize_is_deterministic(cfg):
+    """Fault phase runs BEFORE the scheduler: a crash landing on the same
+    tick as a scale event has a fixed, replayable order."""
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    runs = []
+    for _ in range(2):
+        pol = ElasticScalingPolicy([ScaleEvent(0, 2), ScaleEvent(3, 3)])
+        inj = FaultInjector(FaultPlan([worker_crash(3)]))
+        eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                          policies=[pol], fault_injector=inj,
+                          debug_checks=True, **KW)
+        m = eng.run(_burst(cfg))
+        runs.append((_streams(m), m.summarize()["retries_total"],
+                     m.summarize()["recovery_events"]))
+    assert runs[0] == runs[1]
+    assert runs[0][0] == want
+
+
+def test_worker_slow_keeps_streams_and_feeds_stats(cfg):
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([worker_slow(2, 0, 3.0)]))
+    eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                      fault_injector=inj, **KW)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want  # stragglers never change token streams
+    assert ("worker_slow", 0) in [(k, t) for _, k, t in m.fault_events]
+    assert eng._slow_factors == {0: 3.0}
+
+
+# ---------------------------------------------------------------------------
+# Retry budgets + deadline shedding
+# ---------------------------------------------------------------------------
+
+
+def test_retry_budget_exhaustion_sheds(cfg):
+    reqs = _burst(cfg)
+    for r in reqs:
+        r.max_retries = 0  # first crash is fatal
+    inj = FaultInjector(FaultPlan([worker_crash(3)]))
+    eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                      fault_injector=inj, debug_checks=True, **KW)
+    m = eng.run(reqs)
+    s = m.summarize()
+    assert s["shed_requests"] >= 1
+    assert s["retries_total"] == 0
+    expired = [r for r in m.requests if r.state is RequestState.EXPIRED]
+    assert len(expired) == s["shed_requests"]
+    assert s["requests_finished"] + s["shed_requests"] == len(reqs)
+    # shed requests hold nothing: no slot, no generated tail left behind
+    assert all(r.slot is None for r in expired)
+
+
+def test_deadline_shedding_at_admission(cfg):
+    reqs = _burst(cfg, n=6)
+    for r in reqs:
+        r.deadline = -1.0  # already expired on arrival
+    eng = ServeEngine(cfg, kv_layout="paged", n_workers=1,
+                      debug_checks=True, **KW)
+    m = eng.run(reqs)
+    s = m.summarize()
+    assert s["shed_requests"] == 6 and s["requests_finished"] == 0
+    assert all(r.state is RequestState.EXPIRED for r in m.requests)
+    assert eng.scheduler.pool.n_used == 0
+
+
+def test_seeded_fault_plan_is_deterministic(cfg):
+    outs = []
+    for _ in range(2):
+        inj = FaultInjector(FaultPlan(seed=5, p_crash=0.3, max_random=1))
+        eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                          fault_injector=inj, **KW)
+        m = eng.run(_burst(cfg))
+        outs.append((_streams(m),
+                     [(e.at, e.kind, e.target) for e in inj.injected],
+                     m.summarize()["retries_total"]))
+    assert outs[0] == outs[1]
+    assert outs[0][1], "p_crash=0.3 over a full run should have fired"
+
+
+# ---------------------------------------------------------------------------
+# Disagg: handoff drops, degraded mode, crash between extract and inject
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_handoff_drop_retries_exactly_once(cfg):
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([handoff_drop(2)]))
+    eng = DisaggEngine(cfg, n_workers=2, fault_injector=inj,
+                       debug_checks=True, **KW)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want  # neither lost nor decoded twice
+    d = m.summarize()["disagg"]
+    assert d["handoff_drops"] == 1 and d["handoff_retries"] == 1
+    assert not eng._handoff_retry
+
+
+def test_disagg_prefill_pool_loss_degrades_then_resplits(cfg):
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([worker_crash(3, pool="prefill")]))
+    eng = DisaggEngine(cfg, n_workers=2, fault_injector=inj,
+                       debug_checks=True, **KW)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want
+    assert eng.degraded
+    assert eng.metrics.degraded_events == [(3, "enter:prefill")]
+    # capacity returns: resize >= 2 re-splits into two pools
+    eng.resize(2)
+    assert not eng.degraded
+    assert eng.prefill.k == 1 and eng.decode.k == 1
+    assert eng.metrics.degraded_events[-1][1] == "exit"
+    eng.run(_burst(cfg, n=4, seed=9))  # serves again, both pools live
+
+
+def test_disagg_decode_pool_loss_is_exactly_once(cfg):
+    """Crash the decode pool while handoffs are in flight: every request
+    must finish exactly once (completed prefills keep their KV on the
+    surviving prefill workers; mid-prefill restarts re-execute)."""
+    want = _oracle(cfg, _burst(cfg), n_workers=1, **KW)
+    inj = FaultInjector(FaultPlan([worker_crash(4, pool="decode")]))
+    eng = DisaggEngine(cfg, n_workers=2, fault_injector=inj,
+                       debug_checks=True, **KW)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want
+    assert eng.degraded
+    s = m.summarize()
+    assert s["requests_finished"] == len(want)
+
+
+# ---------------------------------------------------------------------------
+# Cluster: node failures, checkpoint rollback, report columns
+# ---------------------------------------------------------------------------
+
+
+def test_train_job_checkpoint_rollback():
+    from repro.cluster import cocoa_train_job
+    with tempfile.TemporaryDirectory() as d:
+        job = cocoa_train_job("t", iterations=8, k_tasks=2, n=200, f=8,
+                              chunk=25, ckpt_dir=d, ckpt_every=2)
+        job.arrive(0.0)
+        job.on_allocation([0, 1], [1.0, 1.0], 0.0)
+        while job.iterations_done < 5:
+            job.advance(0.2, 0.0)
+        done = job.iterations_done
+        job.on_node_failure(1.0)
+        last_snap = (done // 2) * 2
+        assert job.iterations_done == last_snap
+        assert job.recoveries == 1
+        assert job.recovery_ticks == done - last_snap
+        assert len(job.engine.history) == last_snap
+        while job.iterations_done < 8:
+            job.advance(1.0, 2.0)
+        assert job.state.value == "finished"
+        s = job.summary()
+        assert s["recoveries"] == 1 and s["node_failures"] == 1
+
+
+def test_cluster_fail_and_slow_events_route_and_report(cfg):
+    from repro.cluster import (ClusterOrchestrator, ClusterTrace, DevicePool,
+                               JobSpec, ServeJob, arrive, burst, fail, slow)
+    sj = ServeJob(JobSpec("svc", "serve", max_nodes=2), cfg,
+                  capacity=4, cache_len=32, kv_layout="paged", page_size=8)
+    trace = ClusterTrace([
+        arrive(0.0, "svc"),
+        burst(1.0, "svc", 6, seed=1),
+        slow(2.0, 0, 2.0),
+        fail(3.0, node=1),
+    ])
+    pool = DevicePool(3)
+    with ClusterOrchestrator(pool, [sj], trace, max_ticks=300) as orch:
+        rep = orch.run()
+    assert rep.node_failures == 1
+    assert pool.dead == {1} and pool.n_alive == 2
+    assert pool.pst[0] == 2.0
+    assert all(t.nodes_used <= 2 for t in rep.timeline
+               if t.t >= 3.0), "dead node re-leased"
+    js = rep.jobs["svc"]
+    assert js["state"] == "finished"
+    assert js["serve"]["requests_finished"] == 6
+    if js["node_failures"]:  # node 1 was leased to svc when it died
+        assert js["recoveries"] >= 1
+        assert rep.recoveries >= 1
+    d = rep.to_dict()
+    for col in ("node_failures", "recoveries", "retries", "shed_requests",
+                "recovery_ticks"):
+        assert col in d
+
+
+def test_cluster_lease_revocation_keeps_state():
+    from repro.cluster import (ClusterOrchestrator, ClusterTrace, DevicePool,
+                               arrive, cocoa_train_job, fail)
+    job = cocoa_train_job("t", iterations=6, k_tasks=2, n=200, f=8, chunk=25)
+    trace = ClusterTrace([arrive(0.0, "t"), fail(2.0, "t")])
+    pool = DevicePool(2)
+    rep = ClusterOrchestrator(pool, [job], trace, max_ticks=200).run()
+    assert rep.jobs["t"]["state"] == "finished"
+    assert rep.jobs["t"]["iterations_done"] == 6
+    assert job.preemptions >= 1  # the revocation counted as preemption
+    assert rep.node_failures == 0  # no node died, only the lease
+
+
+def test_orchestrator_context_manager_closes_trace_on_raise(tmp_path):
+    from repro.cluster import (ClusterOrchestrator, ClusterTrace, DevicePool,
+                               arrive, cocoa_train_job)
+    job = cocoa_train_job("t", iterations=4, k_tasks=2, n=100, f=8, chunk=25)
+    trace = ClusterTrace([arrive(0.0, "t")])
+    out = str(tmp_path / "ticks.jsonl")
+    with pytest.raises(RuntimeError, match="boom"):
+        with ClusterOrchestrator(DevicePool(2), [job], trace,
+                                 trace_out=out) as orch:
+            orch.step()
+            assert orch._trace_fh is not None
+            raise RuntimeError("boom")
+    assert orch._trace_fh is None  # __exit__ closed the stream
+    assert open(out).read().count("\n") == 1
+
+
+# ---------------------------------------------------------------------------
+# Input-validation hardening + chaos spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_engine_construction_validation(cfg):
+    with pytest.raises(ValueError, match="capacity"):
+        ServeEngine(cfg, capacity=0)
+    with pytest.raises(ValueError, match="n_workers"):
+        ServeEngine(cfg, n_workers=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        ServeEngine(cfg, cache_len=0)
+    with pytest.raises(ValueError, match="zero-page budget"):
+        ServeEngine(cfg, kv_layout="paged", cache_len=4, page_size=8)
+    with pytest.raises(ValueError, match="page_size"):
+        ServeEngine(cfg, kv_layout="paged", page_size=0)
+
+
+def test_resize_validation(cfg):
+    eng = ServeEngine(cfg, n_workers=2, **KW)
+    with pytest.raises(ValueError, match="suspend"):
+        eng.resize(0)
+    with pytest.raises(ValueError, match="suspend"):
+        eng.resize(-3)
+    eng.resize(1)  # still legal
+    assert eng.k == 1
+
+
+def test_disagg_split_validation(cfg):
+    with pytest.raises(ValueError, match="n_workers"):
+        DisaggEngine(get_config("smollm-360m"), n_workers=0)
+    with pytest.raises(ValueError, match="prefill_workers"):
+        DisaggEngine(cfg, n_workers=4, prefill_workers=4, **KW)
+    with pytest.raises(ValueError, match="prefill_workers"):
+        DisaggEngine(cfg, n_workers=4, prefill_workers=0, **KW)
+    eng = DisaggEngine(cfg, n_workers=2, **KW)
+    with pytest.raises(ValueError, match="at least one worker"):
+        eng.resize(0)
+
+
+def test_fault_plan_validation_and_parse():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0, "meteor")
+    with pytest.raises(ValueError, match=">= 0"):
+        worker_crash(-1)
+    with pytest.raises(ValueError, match="factor"):
+        worker_slow(0, 0, 0.0)
+    with pytest.raises(ValueError, match="p_crash"):
+        FaultPlan(p_crash=1.5)
+    with pytest.raises(ValueError, match="unknown chaos event"):
+        parse_chaos("meteor@t=3")
+    with pytest.raises(ValueError, match="worker and factor"):
+        parse_chaos("slow@t=1")
+    with pytest.raises(ValueError, match="unknown chaos parameter"):
+        parse_chaos("p_meteor=0.5")
+    plan = parse_chaos("crash@t=5:prefill,slow@t=3:w0:2.5,drop@t=8,seed=7")
+    assert [e.kind for e in plan.events] == \
+        ["worker_slow", "worker_crash", "handoff_drop"]
+    assert plan.events[1].payload == {"pool": "prefill"}
+    assert plan.seed == 7
