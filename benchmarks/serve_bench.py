@@ -35,6 +35,12 @@ Three modes:
   crash/retry/shed counts and recovery latency in ticks.  A deadline
   sub-arm re-runs the plan with tight per-request deadlines to exercise
   load shedding.
+- ``--overload``: overload-control A/B — the same 5x burst with and
+  without admission throttling + the brownout ladder (the claim: control
+  trades finished-count for strictly higher SLO goodput, with every
+  offered request accounted finished/rejected/shed and admitted streams
+  bit-equal), plus a crash-storm arm pair showing the circuit breaker
+  cuts retry re-executions without slowing recovery.
 - ``--share``: prefix-sharing on/off A/B on a few-shot shared-header
   workload (every prompt repeats the same long header + a unique
   question).  Both arms run the paged engine on the SAME trace and must
@@ -621,6 +627,177 @@ def run_chaos(arch: str = "smollm-360m", *, fast: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# Overload A/B: admission + brownout goodput, and the breaker vs a storm
+# ---------------------------------------------------------------------------
+
+
+def _tick_run(engine, reqs, *, max_ticks: int):
+    """Drive an engine on an injected tick clock (1 tick = 1 simulated
+    second) so TTFT/TPOT — and therefore SLO attainment and goodput — are
+    deterministic instead of wall-clock noise."""
+    from repro.compat import set_mesh
+    engine.submit(reqs)
+    with set_mesh(engine.mesh):
+        while (engine.scheduler.has_pending or engine._by_slot
+               or engine._prefilling or engine._retrying) \
+                and engine._tick < max_ticks:
+            engine._clk = float(engine._tick)
+            engine.tick()
+    engine.metrics.wall_s = float(engine._tick)
+    return engine.metrics
+
+
+def _burst_workload(cfg, *, fast: bool, seed: int):
+    """~5x overload: a poisson burst arriving several times faster than
+    the pool can serve within the TTFT target."""
+    n = 12 if fast else 24
+    rng = np.random.default_rng(seed)
+    return synthetic_requests(
+        n, vocab_size=cfg.vocab_size,
+        arrivals=poisson_arrivals(n, 10.0, rng=rng),
+        prompt_len=(8, 24), max_new_tokens=(6, 14), rng=rng)
+
+
+def run_overload(arch: str = "smollm-360m", *, fast: bool = False,
+                 dry_run: bool = False, seed: int = 0) -> dict:
+    """Overload-control A/B, two claims on one record.
+
+    Goodput (arms ``none`` vs ``control``): the same 5x burst against the
+    same pool, with SLO tracking on in both.  The uncontrolled arm
+    finishes everything late (low goodput); the controlled arm —
+    token-bucket admission, bounded queue, auto brownout ladder — serves
+    fewer requests but serves them within SLO, for strictly higher
+    goodput.  Every offered request must land exactly one of
+    finished/rejected/shed, and every stream the controlled arm finishes
+    must be bit-equal to the uncontrolled arm's stream for that rid
+    (degradation retimes, never rewrites).
+
+    Retry storm (arms ``storm`` vs ``storm_breaker``): a scripted
+    3-crash storm on one worker.  With the breaker armed, crash victims
+    hold in backoff while it is OPEN and fresh admissions pause, so
+    total retry re-executions drop and recovery completes no later —
+    with all streams still bit-equal and nothing lost."""
+    from repro.serve import CircuitBreaker, crash_storm
+
+    cfg = smoke_variant(get_config(arch))
+    # the burst must actually overload the pool in every mode: fast
+    # halves the offered load, so it also halves the capacity
+    capacity = 4 if (fast or dry_run) else 8
+    kw = dict(capacity=capacity, cache_len=64, prefill_bucket=16,
+              n_workers=2, kv_layout="paged", seed=seed)
+    slo = dict(slo_ttft=10.0, slo_tpot=2.5)  # in tick-seconds
+    max_ticks = 40 if dry_run else 100_000
+    holder = {}
+    clock = lambda: holder["e"]._clk  # noqa: E731
+
+    def build(**extra):
+        e = ServeEngine(cfg, clock=clock, debug_checks=True, **kw, **slo,
+                        **extra)
+        e._clk = 0.0
+        holder["e"] = e
+        return e
+
+    arms = {}
+    streams = {}
+    for name, extra in (
+            ("none", {}),
+            ("control", dict(tenant_rate=8.0, queue_cap=2 * capacity,
+                             brownout="auto"))):
+        m = _tick_run(build(**extra),
+                      _burst_workload(cfg, fast=fast or dry_run, seed=seed),
+                      max_ticks=max_ticks)
+        s = m.summarize()
+        streams[name] = {r.rid: tuple(r.generated) for r in m.requests
+                         if r.state.value == "finished"}
+        arms[name] = {
+            "offered": s["requests_total"],
+            "requests_finished": s["requests_finished"],
+            "rejected": s["rejected_requests"],
+            "shed": s["shed_requests"],
+            "slo_met": s["slo_met"],
+            "goodput": s["goodput"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "brownout_level_max": s["brownout_level_max"],
+            "brownout_events": s["brownout_events"],
+        }
+
+    # retry-storm arms: repeated crashes of the same worker mid-burst
+    def storm(with_breaker):
+        inj = FaultInjector(FaultPlan(crash_storm(2, 3, 3, worker=0)))
+        br = (CircuitBreaker(threshold=2, window=8, cooldown=5,
+                             probe_ticks=2) if with_breaker else None)
+        eng = ServeEngine(cfg, kv_layout="paged", n_workers=4, capacity=4,
+                          cache_len=32, prefill_bucket=8, seed=seed,
+                          slots_per_chunk=1, fault_injector=inj,
+                          breaker=br, debug_checks=True)
+        rng = np.random.default_rng(seed)
+        reqs = synthetic_requests(16, vocab_size=cfg.vocab_size,
+                                  arrivals=np.zeros(16), prompt_len=(6, 16),
+                                  max_new_tokens=(8, 12), rng=rng)
+        m = eng.run(reqs, max_ticks=max_ticks)
+        s = m.summarize()
+        return {
+            "requests_finished": s["requests_finished"],
+            "shed": s["shed_requests"],
+            "crashes": s["crashes_total"],
+            "retries": s["retries_total"],
+            "recovery_ticks_mean": s["recovery_ticks_mean"],
+            "breaker_events": s["breaker_events"],
+        }, {r.rid: tuple(r.generated) for r in m.requests
+            if r.state.value == "finished"}
+
+    arms["storm"], storm_streams = storm(False)
+    arms["storm_breaker"], breaker_streams = storm(True)
+
+    none_a, ctl = arms["none"], arms["control"]
+    rec = {
+        "bench": "serve_bench_overload",
+        "arch": arch,
+        "fast": fast,
+        "dry_run": dry_run,
+        "capacity": capacity,
+        "slo": slo,
+        "none": none_a,
+        "control": ctl,
+        "storm": arms["storm"],
+        "storm_breaker": arms["storm_breaker"],
+        "goodput_gain": ((ctl["goodput"] or 0) - (none_a["goodput"] or 0)),
+        "accounting_ok": (ctl["requests_finished"] + ctl["rejected"]
+                          + ctl["shed"] == ctl["offered"]),
+        "streams_equal": all(streams["none"].get(rid) == g
+                             for rid, g in streams["control"].items()),
+        "storm_streams_equal": storm_streams == breaker_streams,
+        "retries_saved": (arms["storm"]["retries"]
+                          - arms["storm_breaker"]["retries"]),
+    }
+    if not dry_run:
+        assert rec["accounting_ok"], \
+            "control arm lost requests (not finished/rejected/shed)"
+        assert (ctl["goodput"] or 0) > (none_a["goodput"] or 0), \
+            f"overload control did not raise goodput: " \
+            f"{ctl['goodput']} vs {none_a['goodput']}"
+        assert ctl["rejected"] > 0, "burst never tripped admission control"
+        assert ctl["brownout_level_max"] >= 1, \
+            "burst never engaged the degradation ladder"
+        assert rec["streams_equal"], \
+            "controlled arm rewrote a stream (must only retime/refuse)"
+        assert rec["storm_streams_equal"], \
+            "breaker changed storm-survivor streams"
+        assert rec["retries_saved"] > 0, \
+            f"breaker saved no retries: {arms['storm']['retries']} vs " \
+            f"{arms['storm_breaker']['retries']}"
+        assert (arms["storm_breaker"]["recovery_ticks_mean"]
+                <= arms["storm"]["recovery_ticks_mean"]), \
+            "breaker slowed recovery"
+        assert (arms["storm_breaker"]["requests_finished"]
+                == arms["storm"]["requests_finished"]), \
+            "breaker lost requests"
+        kinds = [k for _, k in arms["storm_breaker"]["breaker_events"]]
+        assert "open" in kinds and kinds[-1] == "closed"
+    return rec
+
+
 def main(fast: bool = False) -> None:
     """Entry point for benchmarks.run registration."""
     print(json.dumps(run(requests=8 if fast else 24)))
@@ -630,6 +807,7 @@ def main(fast: bool = False) -> None:
     print(json.dumps(run_attribution(fast=fast)))
     print(json.dumps(run_disagg(fast=fast)))
     print(json.dumps(run_chaos(fast=fast)))
+    print(json.dumps(run_overload(fast=fast)))
 
 
 def _cli() -> None:
@@ -658,6 +836,10 @@ def _cli() -> None:
                     help="fault-free vs injected-crash A/B: survivor "
                          "streams must be bit-equal to the fault-free "
                          "oracle; records recovery latency/retries/shed")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload-control A/B: uncontrolled vs "
+                         "admission+brownout on a 5x burst (goodput), "
+                         "plus a crash-storm breaker on/off arm pair")
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
@@ -677,6 +859,9 @@ def _cli() -> None:
     elif args.chaos:
         rec = run_chaos(args.arch, fast=args.fast, dry_run=args.dry_run,
                         seed=args.seed)
+    elif args.overload:
+        rec = run_overload(args.arch, fast=args.fast, dry_run=args.dry_run,
+                           seed=args.seed)
     elif args.share:
         rec = run_share(args.arch, fast=args.fast, dry_run=args.dry_run,
                         seed=args.seed)

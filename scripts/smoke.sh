@@ -57,6 +57,18 @@ python -m repro.obs.trace --validate /tmp/chaos_trace.json \
 echo "== fault-free vs injected-crash A/B (dry run) =="
 python benchmarks/serve_bench.py --chaos --dry-run
 
+echo "== overload smoke (tight SLOs + admission + brownout + breaker) =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 12 --kv-layout paged --workers 2 --scale-events "" \
+    --slo-ttft 0.05 --slo-tpot 0.02 --tenant-rate 8 --queue-cap 6 \
+    --brownout auto --chaos "crash@t=2" --trace-out /tmp/overload_trace.json \
+    --seed 0
+python -m repro.obs.trace --validate /tmp/overload_trace.json \
+    --require slo.miss,degrade.enter,breaker.open
+
+echo "== overload-control A/B (dry run) =="
+python benchmarks/serve_bench.py --overload --dry-run
+
 echo "== cluster smoke (2 trainers + 1 server, fair-share orchestrator) =="
 python examples/cluster_mix.py --fast
 python benchmarks/cluster_bench.py --dry-run

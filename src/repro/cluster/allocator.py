@@ -46,6 +46,9 @@ class JobDemand:
     demand: int  # max useful nodes right now (0 = idle/suspended)
     weight: float = 1.0
     priority: int = 0  # higher preempts lower via the effective weight
+    # rolling SLO attainment reported by serving jobs (None = not a serving
+    # job / no targets): a job missing its SLOs gets a bounded weight boost
+    attainment: Optional[float] = None
 
 
 class UsageLedger:
@@ -112,17 +115,32 @@ class UsageLedger:
 
 
 class FairShareAllocator:
-    """Pure weighted max-min allocator over a single node pool."""
+    """Pure weighted max-min allocator over a single node pool.
 
-    def __init__(self, priority_boost: float = 4.0):
+    `slo_boost` is the SLO-feedback tilt: a serving job reporting
+    attainment `a` has its effective weight scaled by
+    ``1 + (slo_boost - 1) * (1 - a)`` — a job fully meeting its SLOs
+    (a=1) is unboosted, one missing every target (a=0) gets the full
+    `slo_boost` multiplier.  Like the ledger's credit it only rescales
+    positive weights, so every allocator invariant is preserved, and the
+    bound keeps a collapsed serve job from starving trainers outright."""
+
+    def __init__(self, priority_boost: float = 4.0, slo_boost: float = 2.0):
         if priority_boost <= 1.0:
             raise ValueError("priority_boost must be > 1")
+        if slo_boost < 1.0:
+            raise ValueError("slo_boost must be >= 1")
         self.priority_boost = priority_boost
+        self.slo_boost = float(slo_boost)
 
     def effective_weight(self, d: JobDemand,
                          credit: Optional[Dict[str, float]] = None) -> float:
         c = credit.get(d.name, 1.0) if credit else 1.0
-        return d.weight * self.priority_boost ** d.priority * c
+        s = 1.0
+        if d.attainment is not None and self.slo_boost > 1.0:
+            a = min(max(float(d.attainment), 0.0), 1.0)
+            s = 1.0 + (self.slo_boost - 1.0) * (1.0 - a)
+        return d.weight * self.priority_boost ** d.priority * c * s
 
     def allocate(self, pool_size: int, demands: Sequence[JobDemand],
                  credit: Optional[Dict[str, float]] = None) -> Dict[str, int]:

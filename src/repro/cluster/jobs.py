@@ -140,6 +140,13 @@ class ClusterJob:
             return None
         return self.first_service_time - self.arrival_time
 
+    def slo_attainment(self) -> Optional[float]:
+        """Rolling SLO attainment for jobs that track one (serving jobs
+        with TTFT/TPOT targets); None for everything else.  The
+        orchestrator threads this into `JobDemand` so the allocator can
+        boost a job that is missing its SLOs."""
+        return None
+
     def summary(self) -> Dict[str, Any]:
         return {
             "name": self.spec.name, "kind": self.spec.kind,
@@ -459,6 +466,8 @@ class ServeJob(ClusterJob):
                  kv_layout: str = "flat", page_size: int = 8,
                  prefix_share: Optional[bool] = None,
                  evict: Optional[bool] = None,
+                 slo_ttft: Optional[float] = None,
+                 slo_tpot: Optional[float] = None,
                  seed: int = 0, tracer=None):
         super().__init__(spec)
         self._sim_now = 0.0
@@ -473,6 +482,7 @@ class ServeJob(ClusterJob):
             tenant_weights=tenant_weights, seed=seed,
             kv_layout=kv_layout, page_size=page_size,
             prefix_share=prefix_share, evict=evict,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot,
             clock=lambda: self._sim_now, tracer=tracer)
         self._rid = 0
         self.expected_requests = 0
@@ -592,6 +602,13 @@ class ServeJob(ClusterJob):
             return 0.0
         return max(self._sim_now - self.first_service_time, 0.0)
 
+    def slo_attainment(self) -> Optional[float]:
+        """Windowed attainment from the engine's live tracker (None until
+        targets are set and a finish lands in the window).  `DisaggEngine`
+        exposes the same `slo` property, so `DisaggServeJob` inherits."""
+        slo = self.engine.slo
+        return slo.attainment() if slo is not None else None
+
     def maybe_finish(self, now: float) -> None:
         # no expected_requests floor: a server whose trace never delivers a
         # burst must still retire once its event horizon passes, or the
@@ -610,6 +627,8 @@ class ServeJob(ClusterJob):
         s.update({"serve": srv,
                   "expected_requests": self.expected_requests,
                   "kv_moved_bytes": self.kv_moved_bytes,
+                  "slo_attainment": self.slo_attainment(),
+                  "goodput": srv.get("goodput"),
                   # the serve engine is the authoritative fault ledger here
                   "retries": srv.get("retries_total", 0),
                   "shed_requests": srv.get("shed_requests", 0),
@@ -639,6 +658,8 @@ class DisaggServeJob(ServeJob):
                  prefill_workers: Optional[int] = None,
                  split_policy: Optional["SplitPolicy"] = None,
                  spec_mode: str = "off", spec_k: int = 4,
+                 slo_ttft: Optional[float] = None,
+                 slo_tpot: Optional[float] = None,
                  seed: int = 0, tracer=None):
         ClusterJob.__init__(self, spec)
         self._sim_now = 0.0
@@ -652,6 +673,7 @@ class DisaggServeJob(ServeJob):
             tenant_weights=tenant_weights, seed=seed,
             page_size=page_size, prefix_share=prefix_share, evict=evict,
             spec=spec_mode, spec_k=spec_k,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot,
             clock=lambda: self._sim_now, tracer=tracer)
         self._rid = 0
         self.expected_requests = 0
@@ -737,6 +759,8 @@ class DisaggServeJob(ServeJob):
         s.update({"serve": srv,
                   "expected_requests": self.expected_requests,
                   "kv_moved_bytes": self.kv_moved_bytes,
+                  "slo_attainment": self.slo_attainment(),
+                  "goodput": srv.get("goodput"),
                   "retries": srv.get("retries_total", 0),
                   "shed_requests": srv.get("shed_requests", 0),
                   "recovery_ticks": sum(

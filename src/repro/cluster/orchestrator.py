@@ -197,8 +197,13 @@ class ClusterOrchestrator:
         migrations0 = self.pool.migrations
         with trc.span("allocator.decide", t=self.now,
                       demand=sum(demands.values())):
+            # serving jobs report rolling SLO attainment; the allocator
+            # boosts a job missing its targets (slo_boost), which closes
+            # the loop between brownout pressure and cluster capacity
             jds = [JobDemand(j.spec.name, demands[j.spec.name],
-                             j.spec.weight, j.spec.priority) for j in ordered]
+                             j.spec.weight, j.spec.priority,
+                             attainment=j.slo_attainment())
+                   for j in ordered]
             alloc = self.allocator.allocate(
                 self.pool.n_alive, jds,  # dead nodes never re-lease
                 credit=self.ledger.snapshot() if self.ledger else None)

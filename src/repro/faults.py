@@ -76,6 +76,22 @@ def worker_slow(at: int, worker: int, factor: float) -> FaultEvent:
     return FaultEvent(at, "worker_slow", worker, factor=factor)
 
 
+def crash_storm(at: int, n: int = 3, every: int = 2, *,
+                worker: Optional[int] = None,
+                pool: Optional[str] = None) -> List[FaultEvent]:
+    """`n` worker crashes starting at `at`, one every `every` ticks — the
+    scripted crash storm the circuit-breaker tests and benchmarks trip on.
+    Each crash targets the same (or default highest-id) worker, so the
+    replacement itself keeps dying: exactly the correlated-failure pattern
+    a breaker exists to stop retry-amplifying."""
+    if n < 1:
+        raise ValueError(f"crash_storm needs n >= 1, got {n}")
+    if every < 1:
+        raise ValueError(f"crash_storm needs every >= 1, got {every}")
+    return [worker_crash(at + i * every, worker, pool=pool)
+            for i in range(n)]
+
+
 def revoke_lease(at: int, job: str) -> FaultEvent:
     return FaultEvent(at, "revoke_lease", job)
 

@@ -21,9 +21,9 @@ from ..configs import get_config, smoke_variant
 from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
 from ..obs import Tracer, dominant_host_phase, format_attribution, \
     phase_attribution
-from ..serve import (DisaggEngine, FaultInjector, QueueSplitPolicy,
-                     ServeEngine, parse_chaos, poisson_arrivals,
-                     synthetic_requests)
+from ..serve import (CircuitBreaker, DisaggEngine, FaultInjector,
+                     QueueSplitPolicy, ServeEngine, parse_chaos,
+                     poisson_arrivals, synthetic_requests)
 from .train import scale_config
 
 
@@ -76,6 +76,9 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
           disagg: bool = False, prefill_workers: Optional[int] = None,
           split_interval: int = 4, chaos: Optional[str] = None,
+          slo_ttft: Optional[float] = None, slo_tpot: Optional[float] = None,
+          tenant_rate: Optional[float] = None, queue_cap: Optional[int] = None,
+          brownout: str = "off",
           seed: int = 0, trace_out: Optional[str] = None) -> Dict:
     """Run an open-loop serving workload; returns the metrics summary.
     `trace_out` enables tick-phase tracing and writes a Chrome trace-event
@@ -102,6 +105,11 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
     tracer = Tracer(name=f"serve:{arch}") if trace_out else None
     injector = (FaultInjector(parse_chaos(chaos), tracer=tracer)
                 if chaos else None)
+    # overload control: brownout=auto arms the degradation ladder, and when
+    # chaos is also scripted it arms the crash-storm circuit breaker too
+    breaker = (CircuitBreaker() if brownout == "auto" and chaos else None)
+    ovl = dict(slo_ttft=slo_ttft, slo_tpot=slo_tpot, tenant_rate=tenant_rate,
+               queue_cap=queue_cap, brownout=brownout, breaker=breaker)
     if disagg:
         # disagg is paged-only and splits the pool itself: the scale-event
         # schedule / policies (ServeEngine-internal elasticity) don't apply
@@ -112,7 +120,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
             split_policy=QueueSplitPolicy(interval=split_interval),
             page_size=page_size, spec=spec, spec_k=spec_k,
             prefix_share=prefix_share, evict=evict,
-            fault_injector=injector,
+            fault_injector=injector, **ovl,
             seed=seed, tracer=tracer)
     else:
         engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
@@ -120,7 +128,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
                              policies=policies, kv_layout=kv_layout,
                              page_size=page_size, spec=spec, spec_k=spec_k,
                              prefix_share=prefix_share, evict=evict,
-                             fault_injector=injector,
+                             fault_injector=injector, **ovl,
                              seed=seed, tracer=tracer)
     metrics = engine.run(reqs)
     out = metrics.summarize()
@@ -197,6 +205,25 @@ def main() -> None:
                          "'crash@t=5', 'crash@t=5:prefill' (disagg pool), "
                          "'slow@t=3:w0:2.0', 'drop@t=6', 'p_crash=0.02'; "
                          "comma-separate multiple events")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S",
+                    help="TTFT SLO target in seconds; enables the rolling "
+                         "attainment tracker + goodput accounting")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="S",
+                    help="per-output-token SLO target in seconds")
+    ap.add_argument("--tenant-rate", type=float, default=None, metavar="R",
+                    help="token-bucket admission: R requests/s per tenant "
+                         "(burst defaults to max(R, 1)); excess arrivals "
+                         "are REJECTED with a retry-after hint")
+    ap.add_argument("--queue-cap", type=int, default=None, metavar="N",
+                    help="bounded admission queue: arrivals beyond N queued "
+                         "requests are REJECTED (backpressure) instead of "
+                         "growing the queue without bound")
+    ap.add_argument("--brownout", default="off", choices=["off", "auto"],
+                    help="graceful-degradation ladder driven by SLO "
+                         "attainment + queue pressure (spec shrink -> spec "
+                         "off -> chunk cap -> park low-prio -> shed late); "
+                         "with --chaos also arms the crash-storm circuit "
+                         "breaker")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="enable tick-phase tracing and write a Chrome "
@@ -220,6 +247,9 @@ def main() -> None:
                 evict=onoff(args.evict), disagg=args.disagg,
                 prefill_workers=args.prefill_workers,
                 split_interval=args.split_interval, chaos=args.chaos,
+                slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
+                tenant_rate=args.tenant_rate, queue_cap=args.queue_cap,
+                brownout=args.brownout,
                 seed=args.seed, trace_out=args.trace_out)
     if args.json:
         print(json.dumps(out, indent=2))
@@ -254,6 +284,16 @@ def main() -> None:
               f"(mean {out['recovery_ticks_mean'] or 0:.1f} ticks), "
               f"{out['retries_total']} retries, "
               f"{out['shed_requests']} shed")
+    if out.get("goodput") is not None or out.get("rejected_requests"):
+        gp = out.get("goodput")
+        print(f"  overload: goodput "
+              f"{'n/a' if gp is None else f'{gp:.2f}'} "
+              f"({out.get('slo_met') or 0}/{out['requests_finished']} "
+              f"finished met SLO), {out['rejected_requests']} rejected, "
+              f"{out['shed_requests']} shed, brownout max level "
+              f"{out['brownout_level_max']}"
+              + (f", breaker {out['breaker_events']}"
+                 if out.get("breaker_events") else ""))
     if "attribution" in out:
         print(f"  trace written to {out['trace_out']}; tick-time "
               f"attribution (dominant host phase: "

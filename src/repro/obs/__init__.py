@@ -13,18 +13,24 @@
               breakdown from spans; `dominant_host_phase` names the
               serialized host phase an async tick loop should overlap
               first (ROADMAP open item 1's measurement)
+- `slo`     — `SLOTracker`: rolling TTFT/TPOT attainment windows, the
+              control signal for overload brownouts and split/allocator
+              feedback; traced `slo.miss` instants
 
 The serving engine, cluster orchestrator, and benchmarks all thread a
 `Tracer` through; nothing here imports jax or numpy.
 """
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, percentile
-from .report import dominant_host_phase, format_attribution, phase_attribution
+from .report import (dominant_host_phase, format_attribution,
+                     overload_timeline, phase_attribution)
+from .slo import SLOTracker, meets_slo
 from .trace import (NOOP_SPAN, NULL_TRACER, ScopedTracer, TraceEvent, Tracer,
                     validate_chrome_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NOOP_SPAN",
-    "NULL_TRACER", "ScopedTracer", "TraceEvent", "Tracer",
-    "dominant_host_phase", "format_attribution", "percentile",
-    "phase_attribution", "validate_chrome_trace",
+    "NULL_TRACER", "SLOTracker", "ScopedTracer", "TraceEvent", "Tracer",
+    "dominant_host_phase", "format_attribution", "meets_slo",
+    "overload_timeline", "percentile", "phase_attribution",
+    "validate_chrome_trace",
 ]

@@ -62,6 +62,25 @@ def phase_attribution(tracer_or_events, *,
     return out
 
 
+def overload_timeline(tracer_or_events) -> Dict[str, object]:
+    """Compact summary of the overload-control track: the ordered instant
+    timeline (``slo.miss``, ``admission.reject``, ``degrade.*``,
+    ``breaker.*``) plus per-name counts.  Tests and the serve CLI use it
+    to assert that a run actually exercised the control path rather than
+    merely configuring it."""
+    events = (tracer_or_events.events
+              if isinstance(tracer_or_events, Tracer) else tracer_or_events)
+    timeline = [(e.ts, e.name, dict(e.args))
+                for e in events if e.ph == "i"
+                and (e.track == "overload"
+                     or e.track.endswith(".overload"))]  # scoped halves
+    timeline.sort(key=lambda t: t[0])
+    counts: Dict[str, int] = {}
+    for _, name, _ in timeline:
+        counts[name] = counts.get(name, 0) + 1
+    return {"timeline": timeline, "counts": counts}
+
+
 def dominant_host_phase(attribution: Dict[str, Dict[str, Optional[float]]]
                         ) -> Optional[str]:
     """The phase with the most serialized HOST time — the direct input to

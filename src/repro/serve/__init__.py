@@ -38,12 +38,22 @@ mobile, stateful, and owned by the scheduler strictly between iterations.
                 adopt + restore on the decode side — bit-exact, zero
                 re-prefill) and a per-tick `SplitPolicy` rebalancing the
                 prefill:decode worker split from observed queue depths
+                (or, in mode="slo", from TTFT/TPOT attainment)
+- `overload`  — SLO-aware overload control: per-tenant `TokenBucket`
+                admission + bounded-queue backpressure
+                (`AdmissionController`, REJECTED with a retry-after
+                hint), the brownout `DegradationLadder` (spec shrink ->
+                spec off -> chunk cap -> park low priority -> shed late,
+                with hysteresis), and the crash-storm `CircuitBreaker`
+                (open / half-open probe / closed)
 """
-from ..faults import (FaultEvent, FaultInjector, FaultPlan, handoff_drop,
-                      parse_chaos, worker_crash, worker_slow)
+from ..faults import (FaultEvent, FaultInjector, FaultPlan, crash_storm,
+                      handoff_drop, parse_chaos, worker_crash, worker_slow)
 from .disagg import (DisaggEngine, DisaggMetrics, QueueSplitPolicy,
                      ScheduledSplitPolicy, SplitObs, SplitPolicy)
 from .engine import ServeEngine, ServeMetrics
+from .overload import (AdmissionController, CircuitBreaker,
+                       DegradationLadder, Rejection, TokenBucket)
 from .memory import KVMemoryManager, ParkedSeq, RestorePlan
 from .pages import PageAllocator, PageError
 from .request import (Request, RequestState, poisson_arrivals,
@@ -53,12 +63,14 @@ from .slots import SlotPool
 from .spec import DraftModelDrafter, NgramDrafter, greedy_accept
 
 __all__ = [
+    "AdmissionController", "CircuitBreaker", "DegradationLadder",
     "DisaggEngine", "DisaggMetrics", "DraftModelDrafter", "FaultEvent",
     "FaultInjector", "FaultPlan", "KVMemoryManager", "NgramDrafter",
     "PageAllocator", "PageError", "ParkedSeq", "QueueSplitPolicy",
-    "Request", "RequestState", "RestorePlan", "ScheduledSplitPolicy",
-    "ServeEngine", "ServeMetrics", "SlotPool", "SlotScheduler", "SplitObs",
-    "SplitPolicy", "greedy_accept", "handoff_drop", "parse_chaos",
+    "Rejection", "Request", "RequestState", "RestorePlan",
+    "ScheduledSplitPolicy", "ServeEngine", "ServeMetrics", "SlotPool",
+    "SlotScheduler", "SplitObs", "SplitPolicy", "TokenBucket",
+    "crash_storm", "greedy_accept", "handoff_drop", "parse_chaos",
     "poisson_arrivals", "synthetic_requests", "trace_arrivals",
     "worker_crash", "worker_slow",
 ]

@@ -48,6 +48,7 @@ from ..faults import FaultEvent, FaultInjector
 from ..obs import NULL_TRACER, ScopedTracer, Tracer
 from .engine import ServeEngine, ServeMetrics
 from .memory import ParkedSeq
+from .overload import AdmissionController, CircuitBreaker, DegradationLadder
 from .pages import PageError
 from .request import Request, RequestState
 
@@ -70,6 +71,11 @@ class SplitObs:
     decode_tick_s: float
     handoff_depth: int
     tick: int
+    # rolling SLO attainment from the decode half's tracker (None when no
+    # targets are configured or nothing has finished in the window); lets
+    # a policy trade prefill vs decode workers on the metric users feel
+    ttft_attainment: Optional[float] = None
+    tpot_attainment: Optional[float] = None
 
 
 class SplitPolicy:
@@ -86,14 +92,38 @@ class QueueSplitPolicy(SplitPolicy):
     and move AT MOST one worker toward the proportional target — cheap,
     frequent, minimal-churn rebalancing in the Chicle spirit (a worker
     move costs a remesh on each half, so the policy damps churn rather
-    than chasing every queue wiggle)."""
+    than chasing every queue wiggle).
 
-    def __init__(self, interval: int = 4, min_each: int = 1):
+    mode="slo" steers on SLO attainment instead of backlog: when TTFT
+    attainment trails TPOT attainment by more than `slo_deadband`, new
+    requests are the ones suffering — grow the prefill pool; when TPOT
+    trails, in-flight streams are suffering — grow the decode pool.
+    Inside the dead band (or before any finishes populate the window)
+    it falls back to the backlog-proportional rule, so a cold engine
+    behaves exactly like mode="backlog"."""
+
+    def __init__(self, interval: int = 4, min_each: int = 1,
+                 mode: str = "backlog", slo_deadband: float = 0.05):
+        if mode not in ("backlog", "slo"):
+            raise ValueError(
+                f"mode must be 'backlog' or 'slo', got {mode!r}")
         self.interval = max(1, int(interval))
         self.min_each = max(1, int(min_each))
+        self.mode = mode
+        self.slo_deadband = float(slo_deadband)
 
     def decide(self, obs: SplitObs, *, current: int) -> int:
         if obs.tick % self.interval != 0:
+            return current
+        lo = self.min_each
+        hi = max(obs.total_workers - self.min_each, lo)
+        if self.mode == "slo" and obs.ttft_attainment is not None \
+                and obs.tpot_attainment is not None:
+            gap = obs.ttft_attainment - obs.tpot_attainment
+            if gap < -self.slo_deadband:  # TTFT is the worse SLO
+                return min(current + 1, hi)
+            if gap > self.slo_deadband:  # TPOT is the worse SLO
+                return max(current - 1, lo)
             return current
         # relative cost of a prefill-pool tick vs a decode-pool tick; the
         # clamp keeps one noisy EMA sample from slamming the split
@@ -105,8 +135,6 @@ class QueueSplitPolicy(SplitPolicy):
         wd = float(obs.decode_backlog_tokens + obs.handoff_depth)
         if wp + wd <= 0:
             return current
-        lo = self.min_each
-        hi = max(obs.total_workers - self.min_each, lo)
         want = int(round(obs.total_workers * wp / (wp + wd)))
         want = min(max(want, lo), hi)
         if want > current:
@@ -176,6 +204,10 @@ class DisaggMetrics:
             + self.decode.fault_events,
             recovery_events=self.prefill.recovery_events
             + self.decode.recovery_events,
+            brownout_events=list(self.decode.brownout_events),
+            breaker_events=list(self.decode.breaker_events),
+            slo_ttft=self.decode.slo_ttft,
+            slo_tpot=self.decode.slo_tpot,
             wall_s=self.wall_s if wall_s is None else wall_s)
 
     def summarize(self, wall_s: Optional[float] = None) -> Dict[str, Any]:
@@ -239,7 +271,16 @@ class DisaggEngine:
                  clock: Optional[Any] = None,
                  debug_checks: bool = False,
                  fault_injector: Optional[FaultInjector] = None,
-                 retry_backoff: int = 1,
+                 retry_backoff: int = 1, retry_jitter: bool = True,
+                 slo_ttft: Optional[float] = None,
+                 slo_tpot: Optional[float] = None,
+                 slo_window: int = 64,
+                 tenant_rate: Optional[Any] = None,
+                 tenant_burst: Optional[Any] = None,
+                 queue_cap: Optional[int] = None,
+                 brownout: str = "off",
+                 ladder: Optional[DegradationLadder] = None,
+                 breaker: Optional[CircuitBreaker] = None,
                  tracer: Optional[Tracer] = None):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -271,6 +312,17 @@ class DisaggEngine:
                 return ScopedTracer(self.tracer, scope)
             return None
 
+        # ONE admission controller shared by both halves: fresh arrivals
+        # enter through whichever half currently takes submissions (prefill
+        # normally, decode when degraded), and a shared token bucket means
+        # the tenant's rate limit doesn't reset when the entry point moves
+        admission = None
+        if tenant_rate is not None or queue_cap is not None:
+            admission = AdmissionController(
+                tenant_rate=tenant_rate, tenant_burst=tenant_burst,
+                queue_cap=queue_cap,
+                drain_rate=float(max_admit_per_tick))
+
         self.prefill = ServeEngine(
             cfg, capacity=(prefill_capacity if prefill_capacity is not None
                            else capacity),
@@ -286,6 +338,8 @@ class DisaggEngine:
             # park path on this half
             evict=False, spec="off", decode_enabled=False,
             debug_checks=debug_checks, retry_backoff=retry_backoff,
+            retry_jitter=retry_jitter, admission=admission,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot, slo_window=slo_window,
             tracer=scoped("prefill_pool"))
         self.decode = ServeEngine(
             cfg, capacity=capacity, cache_len=cache_len,
@@ -300,7 +354,14 @@ class DisaggEngine:
             prefix_share=prefix_share, evict=evict,
             spec=spec, spec_k=spec_k, drafter=drafter, draft_cfg=draft_cfg,
             draft_params=draft_params, debug_checks=debug_checks,
-            retry_backoff=retry_backoff, tracer=scoped("decode_pool"))
+            retry_backoff=retry_backoff, retry_jitter=retry_jitter,
+            admission=admission,
+            # the decode half hosts the control loop: it owns the SLO
+            # tracker that scores finishes, and the brownout ladder /
+            # breaker act where the levers live (spec, chunk width, parks)
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot, slo_window=slo_window,
+            brownout=brownout, ladder=ladder, breaker=breaker,
+            tracer=scoped("decode_pool"))
 
         # the DISAGG engine owns the injector (the halves get none): pool
         # routing and handoff drops only make sense at this level
@@ -366,6 +427,12 @@ class DisaggEngine:
         kp = 1 if k == 1 else min(max(int(round(frac * k)), 1), k - 1)
         self._apply_split(kp)
 
+    @property
+    def slo(self):
+        """The live SLO tracker (decode half's — the one finishes score
+        against); None when no targets are configured."""
+        return self.decode.slo
+
     def _observe(self) -> SplitObs:
         now = self._now()
         p, d = self.prefill, self.decode
@@ -378,13 +445,18 @@ class DisaggEngine:
         dtoks = sum(remaining(r) for r in d._by_slot.values())
         dtoks += sum(remaining(r) for r, _ in self._handoff)
         dtoks += sum(remaining(r) for r in d.scheduler.pending)
+        slo = self.decode.slo
         return SplitObs(total_workers=self.total_workers,
                         prefill_backlog_tokens=int(ptoks),
                         decode_backlog_tokens=int(dtoks),
                         prefill_tick_s=self._ema_p,
                         decode_tick_s=self._ema_d,
                         handoff_depth=len(self._handoff),
-                        tick=self._tick)
+                        tick=self._tick,
+                        ttft_attainment=(slo.ttft_attainment()
+                                         if slo is not None else None),
+                        tpot_attainment=(slo.tpot_attainment()
+                                         if slo is not None else None))
 
     def _maybe_rebalance(self) -> None:
         pol = self.split_policy
@@ -445,7 +517,7 @@ class DisaggEngine:
                 d._shed(req, now, reason="retries")
             else:
                 req.state = RequestState.RETRYING
-                ready = d._tick + d.retry_backoff * (1 << (req.retries - 1))
+                ready = d._tick + d._backoff_ticks(req.retries)
                 d._retrying.append((ready, req))
                 d._tick_faults["retries"] += 1
                 d.tracer.count("serve.retries_total")
@@ -530,6 +602,28 @@ class DisaggEngine:
             self.tracer.count("serve.handoff_bytes", seq.nbytes)
             moved += 1
         return moved
+
+    def _sweep_handoff(self, now: float) -> int:
+        """Deadline sweep over the handoff queue: a request can blow its
+        deadline while its parked KV sits between the pools (neither
+        half's scheduler sees it there, so neither `_shed_expired` can).
+        Dropping the pair frees the host payload with it — the decode
+        half never adopts the pages of work it would immediately shed."""
+        if not self._handoff:
+            return 0
+        now = float(now)
+        keep: Deque[Tuple[Request, ParkedSeq]] = deque()
+        shed = 0
+        while self._handoff:
+            req, seq = self._handoff.popleft()
+            if req.deadline is not None \
+                    and now - req.arrival_time > req.deadline:
+                self.decode._shed(req, now, reason="deadline")
+                shed += 1
+            else:
+                keep.append((req, seq))
+        self._handoff = keep
+        return shed
 
     def _inject_ready(self) -> int:
         """Move every queued handoff into the decode pool (adopt + queue);
@@ -638,6 +732,7 @@ class DisaggEngine:
             self._ema_p = dt if self._ema_p == 0 else \
                 0.5 * self._ema_p + 0.5 * dt
         self._drain_prefilled()
+        self._sweep_handoff(self._now())
         self._inject_ready()
         if d.scheduler.has_pending or d._by_slot or d._prefilling \
                 or d._retrying:

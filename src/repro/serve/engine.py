@@ -54,9 +54,11 @@ from ..compat import mesh_from_devices, set_mesh
 from ..configs.base import ModelConfig
 from ..faults import FaultEvent, FaultInjector
 from ..models import model as M
-from ..obs import MetricsRegistry, NULL_TRACER, Tracer
+from ..obs import MetricsRegistry, NULL_TRACER, SLOTracker, Tracer, meets_slo
 from ..sharding import AxisRules
 from .memory import KVMemoryManager
+from .overload import (AdmissionController, CircuitBreaker,
+                       DegradationLadder)
 from .pages import PageAllocator, next_pow2
 from .request import Request, RequestState
 from .scheduler import SlotScheduler
@@ -95,6 +97,7 @@ class TickRecord:
     crashes: int = 0  # worker-crash faults applied this tick
     retries: int = 0  # victim requests re-queued for re-execution this tick
     shed: int = 0  # requests expired this tick (retry budget / deadline)
+    brownout_level: int = 0  # degradation-ladder level this tick (0 = full)
 
 
 @dataclasses.dataclass
@@ -113,6 +116,15 @@ class ServeMetrics:
         default_factory=list)  # (tick, kind, target)
     recovery_events: List[Tuple[int, int, int]] = dataclasses.field(
         default_factory=list)  # (crash_tick, recovery_ticks, n_victims)
+    # overload control: SLO targets stamped by the engine (so goodput is
+    # computed from the request records, independent of tracker windows),
+    # ladder transitions (tick, level, level_name) and breaker transitions
+    brownout_events: List[Tuple[int, int, str]] = dataclasses.field(
+        default_factory=list)
+    breaker_events: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list)
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
     wall_s: float = 0.0
 
     def to_registry(self, registry: Optional[MetricsRegistry] = None
@@ -144,6 +156,20 @@ class ServeMetrics:
                 h_hoff.observe(r.handoff_delay)
                 requeued += 1
         reg.gauge("serve.requeued").set(requeued)
+        # backpressure + SLO attainment: rejections are terminal refusals
+        # at admission (never queued), counted apart from EXPIRED sheds;
+        # goodput scores FINISHED requests against the stamped targets
+        # (per-request overrides win) straight from their timestamps
+        reg.gauge("serve.requests_rejected").set(
+            sum(1 for r in self.requests
+                if r.state is RequestState.REJECTED))
+        if self.slo_ttft is not None or self.slo_tpot is not None:
+            met = sum(1 for r in done if meets_slo(
+                r.ttft(), r.tpot(),
+                self.slo_ttft if r.slo_ttft is None else r.slo_ttft,
+                self.slo_tpot if r.slo_tpot is None else r.slo_tpot))
+            reg.gauge("serve.slo_met").set(met)
+            reg.gauge("serve.goodput").set(met / len(done) if done else 0.0)
         reg.counter("serve.tokens_generated").inc(
             sum(r.n_generated for r in done))
         per_tick = {
@@ -247,6 +273,21 @@ class ServeMetrics:
             "crashes_total": cnt("serve.crashes"),
             "recovery_ticks_mean": hist("serve.recovery_ticks").mean,
             "recovery_events": [list(e) for e in self.recovery_events],
+            # overload control: backpressure + SLO goodput + brownouts
+            "rejected_requests": int(
+                reg.gauge("serve.requests_rejected").value),
+            "slo_ttft_target": self.slo_ttft,
+            "slo_tpot_target": self.slo_tpot,
+            "slo_met": (int(reg.gauge("serve.slo_met").value)
+                        if (self.slo_ttft is not None
+                            or self.slo_tpot is not None) else None),
+            "goodput": (float(reg.gauge("serve.goodput").value)
+                        if (self.slo_ttft is not None
+                            or self.slo_tpot is not None) else None),
+            "brownout_events": [list(e) for e in self.brownout_events],
+            "breaker_events": [list(e) for e in self.breaker_events],
+            "brownout_level_max": max(
+                (t.brownout_level for t in self.ticks), default=0),
             "kv_stats": dict(self.kv_stats),
             "jit_cache_sizes": dict(self.jit_cache_sizes),
             "n_ticks": len(self.ticks),
@@ -302,6 +343,17 @@ class ServeEngine:
                  decode_enabled: bool = True,
                  fault_injector: Optional[FaultInjector] = None,
                  retry_backoff: int = 1,
+                 retry_jitter: bool = True,
+                 slo_ttft: Optional[float] = None,
+                 slo_tpot: Optional[float] = None,
+                 slo_window: int = 64,
+                 tenant_rate: Optional[Any] = None,
+                 tenant_burst: Optional[Any] = None,
+                 queue_cap: Optional[int] = None,
+                 admission: Optional[AdmissionController] = None,
+                 brownout: str = "off",
+                 ladder: Optional[DegradationLadder] = None,
+                 breaker: Optional[CircuitBreaker] = None,
                  tracer: Optional[Tracer] = None,
                  max_cached_meshes: int = 2, max_cached_fns: int = 16):
         if cfg.family not in SUPPORTED_FAMILIES:
@@ -321,6 +373,9 @@ class ServeEngine:
         if spec not in ("off", "ngram", "draft"):
             raise ValueError(f"spec must be 'off', 'ngram' or 'draft', "
                              f"got {spec!r}")
+        if brownout not in ("off", "auto"):
+            raise ValueError(f"brownout must be 'off' or 'auto', "
+                             f"got {brownout!r}")
         if kv_layout != "paged":
             if prefix_share:
                 raise ValueError("prefix_share requires kv_layout='paged' "
@@ -368,10 +423,29 @@ class ServeEngine:
         self.rng = np.random.default_rng(seed)
         self.params = (params if params is not None
                        else M.init_params(cfg, jax.random.key(seed)))
+        # overload control (everything defaults OFF = bit-identical to an
+        # engine without these knobs): token-bucket + bounded-queue
+        # admission lives in the scheduler; the SLO tracker scores
+        # finishes; the degradation ladder and circuit breaker act in tick
+        if admission is None and (tenant_rate is not None
+                                  or queue_cap is not None):
+            admission = AdmissionController(
+                tenant_rate=tenant_rate, tenant_burst=tenant_burst,
+                queue_cap=queue_cap,
+                drain_rate=float(max_admit_per_tick))
+        self.slo = (SLOTracker(ttft_target=slo_ttft, tpot_target=slo_tpot,
+                               window=slo_window, tracer=self.tracer)
+                    if (slo_ttft is not None or slo_tpot is not None)
+                    else None)
+        self.ladder = (ladder if ladder is not None
+                       else DegradationLadder() if brownout == "auto"
+                       else None)
+        self.breaker = breaker
         self.scheduler = SlotScheduler(
             capacity, n_workers=n_workers, slots_per_chunk=slots_per_chunk,
             policies=policies, max_admit_per_tick=max_admit_per_tick,
-            seed=seed, tenant_weights=tenant_weights, tracer=self.tracer)
+            seed=seed, tenant_weights=tenant_weights, admission=admission,
+            tracer=self.tracer)
         # external simulation clock (cluster orchestrator); None = wall clock
         self._clock = clock
         self.suspended = False
@@ -452,11 +526,22 @@ class ServeEngine:
         # exponential backoff expires, then re-queue through the scheduler
         self.fault_injector = fault_injector
         self.retry_backoff = max(1, int(retry_backoff))
+        # jittered backoff desynchronizes multi-victim re-admission (no
+        # thundering herd); drawn from the engine RNG, deterministic per
+        # seed, and timing-only (streams stay bit-equal to the oracle)
+        self.retry_jitter = bool(retry_jitter)
         self._retrying: List[Tuple[int, Request]] = []
         self._slow_factors: Dict[int, float] = {}
         self._recovering: List[Dict[str, Any]] = []
         self._tick_faults = {"crashes": 0, "retries": 0, "shed": 0}
         self.metrics = ServeMetrics()
+        self.metrics.slo_ttft = slo_ttft
+        self.metrics.slo_tpot = slo_tpot
+        # the ladder degrades/restores these; the base values are the
+        # level-0 configuration recovery walks back to
+        self._base_spec_k = self.spec_k
+        self._base_drafter = self.drafter
+        self._base_prefill_chunk = self.prefill_chunk
         self._tick = 0
         self._t0: Optional[float] = None
         self._last_stats: Dict = {}
@@ -742,6 +827,13 @@ class ServeEngine:
         if self.mem is not None and req.slot is not None:
             self.mem.release_slot(req.slot)
         self.scheduler.release(req, now)
+        if self.slo is not None:
+            # score the finish against its targets (per-request overrides
+            # win); the tracker traces slo.miss and feeds the ladder
+            self.slo.observe(rid=req.rid, tenant=req.tenant,
+                             ttft=req.ttft(), tpot=req.tpot(),
+                             ttft_target=req.slo_ttft,
+                             tpot_target=req.slo_tpot)
 
     # --- eviction: park / restore (page-granular preemption) --------------
     def park(self, slot: int, *, requeue: bool = True) -> int:
@@ -858,6 +950,17 @@ class ServeEngine:
         return plan.moved_bytes
 
     # --- fault injection + crash recovery ---------------------------------
+    def _backoff_ticks(self, retries: int) -> int:
+        """Exponential crash-retry backoff, jittered by uniform(0.5, 1.5)
+        from the engine RNG: victims of one crash spread their re-admission
+        over distinct ticks instead of stampeding back as one cohort.
+        Deterministic per seed; at least one tick either way."""
+        base = self.retry_backoff * (1 << (retries - 1))
+        if self.retry_jitter:
+            return max(1, int(round(base * float(self.rng.uniform(0.5,
+                                                                  1.5)))))
+        return base
+
     def apply_fault(self, ev: FaultEvent) -> None:
         """Route one injected fault.  Serve-level kinds only: revoke_lease
         is cluster scope and handoff_drop is disagg scope — both are
@@ -925,8 +1028,7 @@ class ServeEngine:
                     self._shed(req, now, reason="retries")
                 else:
                     req.state = RequestState.RETRYING
-                    ready = self._tick + self.retry_backoff \
-                        * (1 << (req.retries - 1))
+                    ready = self._tick + self._backoff_ticks(req.retries)
                     self._retrying.append((ready, req))
                     self._tick_faults["retries"] += 1
                     self.tracer.count("serve.retries_total")
@@ -987,6 +1089,63 @@ class ServeEngine:
             else:
                 keep.append((rdy, req))
         self._retrying = keep
+
+    # --- graceful degradation (brownout ladder) ---------------------------
+    def _apply_degradation(self, level: int) -> None:
+        """Reconfigure for a ladder level.  A pure function of (base
+        config, level) — walking back down restores the exact level-0
+        configuration.  Every action trades service *quality* (latency,
+        batching efficiency), never stream content: greedy decode at any
+        level is bit-equal to an oracle engine statically configured the
+        same way."""
+        k = self._base_spec_k
+        drafter = self._base_drafter
+        chunk = self._base_prefill_chunk
+        if level >= 1:  # spec_shrink: halve the draft depth
+            k = max(1, k // 2) if k else 0
+        if level >= 2:  # spec_off: drop speculative drafting entirely
+            drafter = None
+        if level >= 3 and self.chunked_prefill:
+            chunk = self.page_size  # chunk_cap: minimum legal chunk width
+        restored = drafter is not None and self.drafter is None
+        self.drafter = drafter
+        self.spec_k = k if drafter is not None else 0
+        self.prefill_chunk = chunk
+        if restored and self.mesh is not None:
+            # resize() skips a detached drafter; re-sync its device state
+            # with the current mesh on the way back up
+            drafter.on_resize(self.mesh, self.rules)
+
+    def _brownout_actions(self, now: float) -> None:
+        """Per-tick work for the ladder's top levels (the lower levels are
+        pure reconfiguration applied once per transition)."""
+        lvl = self.ladder.level
+        sched = self.scheduler
+        if lvl >= 4 and self.mem is not None and self.evict:
+            # park_low: free a slot for a strictly higher-priority waiter
+            # even before the pool is full (admission's preempt hook only
+            # fires once it is)
+            heads = [q[0] for q in sched._queues.values()
+                     if q and q[0].arrival_time <= now]
+            if heads:
+                top = max(h.priority for h in heads)
+                victim = self._pick_victim()
+                if victim is not None \
+                        and self._by_slot[victim].priority < top:
+                    self.park(victim)
+                    self.tracer.instant("degrade.park", track="overload",
+                                        slot=victim)
+        if lvl >= 5 and self.slo is not None \
+                and self.slo.ttft_target is not None:
+            # shed_late: a queued request already past its TTFT target is
+            # a guaranteed miss — shed it instead of serving dead weight.
+            # Parked/retrying work is exempt (it holds restorable state).
+            late = sched.pop_older_than(
+                now, self.slo.ttft_target,
+                pred=lambda r: (r.state is RequestState.QUEUED
+                                and r.retries == 0))
+            for r in late:
+                self._shed(r, now, reason="brownout")
 
     def _settle_recoveries(self) -> None:
         """Close recovery windows: a crash's victim cohort is recovered
@@ -1197,7 +1356,18 @@ class ServeEngine:
                 raise ValueError(
                     f"request {r.rid}: prompt {r.prompt_len} + max_new "
                     f"{r.max_new_tokens} exceeds cache_len {self.cache_len}")
-            self.scheduler.submit(r)
+            ok, verdict = self.scheduler.try_submit(r)
+            if not ok:
+                # explicit backpressure: terminal REJECTED with a retry-
+                # after hint, never queued, counted apart from sheds
+                r.state = RequestState.REJECTED
+                r.retry_after = verdict.retry_after
+                r.t_finished = r.arrival_time
+                self.tracer.instant("admission.reject", track="overload",
+                                    rid=r.rid, tenant=r.tenant,
+                                    reason=verdict.reason,
+                                    retry_after=verdict.retry_after)
+                self.tracer.count("serve.rejected")
             self.metrics.requests.append(r)
 
     def _paged_batch_inputs(self, active: List[int], n_new: np.ndarray
@@ -1367,9 +1537,43 @@ class ServeEngine:
         if self.fault_injector is not None:
             for ev in self.fault_injector.poll(self._tick):
                 self.apply_fault(ev)
-        if self._retrying:
+        if self._retrying and not (self.breaker is not None
+                                   and self.breaker.state == "open"):
+            # an OPEN breaker holds crash victims in backoff too: re-
+            # admitting them mid-storm just feeds the next crash (retry
+            # amplification); they drain at half-open, when the probe
+            # window is already watching for a re-fault
             self._requeue_retries()
         self._shed_expired(now)
+
+        # ---- overload-control phase: the breaker watches the fault counts
+        # accumulated since the last tick (injector + external crash_worker
+        # calls land in _tick_faults either way); the ladder re-evaluates
+        # its level from rolling attainment + queue pressure ----
+        if self.breaker is not None:
+            tr = self.breaker.update(
+                self._tick,
+                self._tick_faults["crashes"] + self._tick_faults["retries"])
+            if tr is not None:
+                self.metrics.breaker_events.append((self._tick, tr))
+                trc.instant(f"breaker.{tr}", track="overload",
+                            tick=self._tick)
+                trc.count("serve.breaker_transitions")
+        if self.ladder is not None:
+            prev = self.ladder.level
+            att = self.slo.attainment() if self.slo is not None else None
+            lvl = self.ladder.update(att, sched.n_arrived(now),
+                                     self.capacity)
+            if lvl != prev:
+                name = DegradationLadder.LEVELS[lvl]
+                self.metrics.brownout_events.append((self._tick, lvl, name))
+                trc.instant("degrade.enter" if lvl > prev
+                            else "degrade.exit", track="overload",
+                            level=lvl, label=name)
+                trc.count("serve.degrade_transitions")
+                trc.gauge("serve.brownout_level", lvl)
+                self._apply_degradation(lvl)
+            self._brownout_actions(now)
 
         # ---- scheduler phase: policies may rescale/rebalance the pool ----
         with trc.span("schedule", k=sched.n_workers):
@@ -1391,9 +1595,19 @@ class ServeEngine:
         # request — a strictly lower-priority in-flight decode is parked
         # (pages to host), not just queued behind
         with trc.span("admit"):
+            limit = allow = None
+            if self.breaker is not None:
+                lim = self.breaker.admit_limit()
+                if lim == 0:
+                    # open: recovery traffic only — crash victims re-admit
+                    # so recovery drains, fresh load waits the storm out
+                    allow = lambda r: r.retries > 0  # noqa: E731
+                elif lim is not None:
+                    limit = lim  # half-open probe budget
             admitted = sched.admit(
                 now, preempt=self._preempt_for if (self.mem is not None
-                                                   and self.evict) else None)
+                                                   and self.evict) else None,
+                limit=limit, allow=allow)
         admission_bytes = self._do_prefill(admitted) if admitted else 0
         n_chunks = 0
         n_chunk_dispatch = 0
@@ -1523,7 +1737,10 @@ class ServeEngine:
                          draft_dispatches=draft_disp,
                          crashes=self._tick_faults["crashes"],
                          retries=self._tick_faults["retries"],
-                         shed=self._tick_faults["shed"], **kv)
+                         shed=self._tick_faults["shed"],
+                         brownout_level=(self.ladder.level
+                                         if self.ladder is not None else 0),
+                         **kv)
         self._tick_faults = {"crashes": 0, "retries": 0, "shed": 0}
         self.metrics.ticks.append(rec)
         if trc.enabled:

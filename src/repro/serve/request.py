@@ -10,6 +10,12 @@ with a crashed worker goes RETRYING (its stream resets and it re-queues
 after an exponential backoff, up to `max_retries`), and a request that
 blows its retry budget or its `deadline` goes EXPIRED — a terminal
 load-shed state distinct from FINISHED.
+
+Overload control adds a third terminal branch *before* the queue: a
+request refused by token-bucket admission or a full bounded queue goes
+REJECTED with a `retry_after` hint (explicit backpressure).  Rejections
+are counted separately from EXPIRED sheds — a shed wasted queue/compute
+time, a rejection by design did not.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ class RequestState(enum.Enum):
     RETRYING = "retrying"  # lost to a worker crash; backing off to re-queue
     FINISHED = "finished"
     EXPIRED = "expired"  # shed: retry budget or deadline exhausted (terminal)
+    REJECTED = "rejected"  # refused at admission (backpressure; terminal)
 
 
 @dataclasses.dataclass
@@ -46,6 +53,11 @@ class Request:
     deadline: Optional[float] = None
     max_retries: int = 3
     retries: int = 0
+    # overload control: per-request SLO targets (None = engine defaults);
+    # retry_after is stamped on REJECTED requests as a client backoff hint
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
+    retry_after: Optional[float] = None
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None

@@ -20,6 +20,7 @@ from ..core.chunks import Assignment, ChunkStore
 from ..core.fairshare import stride_pick
 from ..core.policies import Policy
 from ..obs import NULL_TRACER, Tracer
+from .overload import AdmissionController
 from .request import Request, RequestState
 from .slots import SlotPool
 
@@ -39,8 +40,14 @@ class SlotScheduler:
                  tenant_weights: Optional[Dict[str, float]] = None,
                  on_worker_added: Optional[Callable[[int], None]] = None,
                  on_worker_removed: Optional[Callable[[int], None]] = None,
+                 admission: Optional[AdmissionController] = None,
                  tracer: Optional[Tracer] = None):
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # overload control: token buckets + bounded queue; None = unlimited
+        # (the default, bit-identical to the pre-overload scheduler).  Only
+        # `try_submit` consults it — internal re-queues (park, crash retry)
+        # go through `submit` and are never re-charged or re-capped.
+        self.admission = admission
         self.pool = SlotPool(capacity)
         # slot ids ARE the chunk store's samples: chunk c owns slots
         # [c*spc, (c+1)*spc) and moves between workers as one unit.
@@ -122,6 +129,10 @@ class SlotScheduler:
         return sum(1 for q in self._queues.values()
                    for r in q if r.arrival_time <= now)
 
+    def queue_len(self) -> int:
+        """Total queued requests across tenants (bounded-queue signal)."""
+        return sum(len(q) for q in self._queues.values())
+
     def _vtime(self, tenant: str) -> float:
         return (self._admitted.get(tenant, 0.0)
                 / self.tenant_weights.get(tenant, 1.0))
@@ -141,8 +152,49 @@ class SlotScheduler:
         # sorted insertion keeps FCFS-by-arrival within each tenant queue
         bisect.insort(q, req, key=lambda r: r.arrival_time)
 
+    def try_submit(self, req: Request, now: Optional[float] = None):
+        """Admission-controlled submit for FRESH arrivals.
+
+        Returns ``(True, None)`` when the request was queued, or
+        ``(False, Rejection)`` when the token bucket or the bounded
+        queue refused it (the caller marks it REJECTED and stamps the
+        retry-after hint).  The bucket clock is the request's arrival
+        time by default, so replayed traces admit identically no matter
+        when they are submitted.
+        """
+        if self.admission is not None and self.admission.enabled:
+            t = req.arrival_time if now is None else now
+            verdict = self.admission.check(req.tenant, t, self.queue_len())
+            if verdict is not None:
+                return False, verdict
+        self.submit(req)
+        return True, None
+
+    def pop_older_than(self, now: float, age: float, *,
+                       pred: Optional[Callable[[Request], bool]] = None
+                       ) -> List[Request]:
+        """Pop queued requests that have waited longer than `age` seconds
+        (and match `pred`, when given).  The brownout ladder's top level
+        uses this to shed work that can no longer meet its TTFT target;
+        the engine marks the returned requests EXPIRED."""
+        out: List[Request] = []
+        for tenant in list(self._queues):
+            keep: List[Request] = []
+            for r in self._queues[tenant]:
+                if now - r.arrival_time > age and (pred is None or pred(r)):
+                    out.append(r)
+                else:
+                    keep.append(r)
+            if keep:
+                self._queues[tenant] = keep
+            else:
+                del self._queues[tenant]
+        return out
+
     def admit(self, now: float, *,
-              preempt: Optional[Callable[[Request], bool]] = None
+              preempt: Optional[Callable[[Request], bool]] = None,
+              limit: Optional[int] = None,
+              allow: Optional[Callable[[Request], bool]] = None
               ) -> List[Request]:
         """Admit arrived requests into free slots: weighted round-robin over
         tenants with an arrived head-of-line request (stride pick on
@@ -153,11 +205,29 @@ class SlotScheduler:
         preempt: optional engine hook enabling PRIORITY admission when the
         pool is full — called with the highest-priority waiting head; if it
         parks a strictly lower-priority in-flight slot (returning True) the
-        freed slot admits that head this tick instead of queueing it."""
+        freed slot admits that head this tick instead of queueing it.
+
+        limit: optional per-call cap below `max_admit_per_tick` (the
+        circuit breaker's half-open probe budget).  allow: optional
+        admissibility filter — the open breaker passes only recovery
+        traffic; matching requests BYPASS non-matching ones queued ahead
+        of them (a retrying victim must not be head-of-line blocked by
+        the paused fresh traffic the breaker is protecting it from)."""
         admitted: List[Request] = []
-        while len(admitted) < self.max_admit_per_tick:
-            eligible = [t for t, q in self._queues.items()
-                        if q and q[0].arrival_time <= now]
+        budget = self.max_admit_per_tick if limit is None \
+            else min(limit, self.max_admit_per_tick)
+        while len(admitted) < budget:
+            # per-tenant index of the first admissible request: the head
+            # normally, or the first `allow` match (recovery bypass)
+            heads: Dict[str, int] = {}
+            for t, q in self._queues.items():
+                for i, r in enumerate(q):
+                    if r.arrival_time > now:
+                        break  # sorted by arrival: nothing later has come
+                    if allow is None or allow(r):
+                        heads[t] = i
+                        break
+            eligible = list(heads)
             if not eligible:
                 break
             room = self.pool.n_free and (self.active_cap is None
@@ -165,18 +235,19 @@ class SlotScheduler:
             if room:
                 tenant = stride_pick(
                     self._admitted, self.tenant_weights, eligible,
-                    tiebreak=lambda t: self._queues[t][0].arrival_time)
-                req = self._queues[tenant].pop(0)
+                    tiebreak=lambda t: self._queues[t][heads[t]].arrival_time)
+                req = self._queues[tenant].pop(heads[tenant])
             else:
                 if preempt is None:
                     break
                 # full pool (or lease cap reached): only the highest-
                 # priority waiting head may force its way in by evicting
                 # (parking) a running victim
-                tenant = max(eligible,
-                             key=lambda t: (self._queues[t][0].priority,
-                                            -self._queues[t][0].arrival_time))
-                req = self._queues[tenant][0]
+                tenant = max(
+                    eligible,
+                    key=lambda t: (self._queues[t][heads[t]].priority,
+                                   -self._queues[t][heads[t]].arrival_time))
+                req = self._queues[tenant][heads[tenant]]
                 if not preempt(req):
                     break  # no strictly lower-priority victim to park
                 # remove by IDENTITY: parking re-queued the victim, and in a
