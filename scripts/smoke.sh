@@ -18,6 +18,16 @@ python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
 python -m repro.obs.trace --validate /tmp/serve_trace.json \
     --require schedule,admit,prefill.dispatch,decode.dispatch,device_wait
 
+echo "== overlapped traced serve (async tick pipeline spans) =="
+python -m repro.launch.serve --arch smollm-360m --smoke --trace poisson \
+    --requests 8 --kv-layout paged --overlap \
+    --trace-out /tmp/overlap_trace.json --seed 0
+python -m repro.obs.trace --validate /tmp/overlap_trace.json \
+    --require overlap.prep,overlap.bind,overlap.inflight,prefill.device_wait
+
+echo "== overlapped paged+spec vs flat A/B (dry run) =="
+python benchmarks/serve_bench.py --ab --overlap --dry-run
+
 echo "== disabled-tracing overhead guard =="
 python -m pytest -q tests/test_obs.py -k overhead
 

@@ -20,7 +20,7 @@ import numpy as np
 from ..configs import get_config, smoke_variant
 from ..core import ElasticScalingPolicy, ScaleEvent, StragglerMitigationPolicy
 from ..obs import Tracer, dominant_host_phase, format_attribution, \
-    phase_attribution
+    host_overlap_ratio, phase_attribution
 from ..serve import (CircuitBreaker, DisaggEngine, FaultInjector,
                      QueueSplitPolicy, ServeEngine, parse_chaos,
                      poisson_arrivals, synthetic_requests)
@@ -75,7 +75,8 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
           page_size: int = 8, spec: str = "off", spec_k: int = 4,
           prefix_share: Optional[bool] = None, evict: Optional[bool] = None,
           disagg: bool = False, prefill_workers: Optional[int] = None,
-          split_interval: int = 4, chaos: Optional[str] = None,
+          split_interval: int = 4, overlap: bool = False,
+          chaos: Optional[str] = None,
           slo_ttft: Optional[float] = None, slo_tpot: Optional[float] = None,
           tenant_rate: Optional[float] = None, queue_cap: Optional[int] = None,
           brownout: str = "off",
@@ -120,7 +121,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
             split_policy=QueueSplitPolicy(interval=split_interval),
             page_size=page_size, spec=spec, spec_k=spec_k,
             prefix_share=prefix_share, evict=evict,
-            fault_injector=injector, **ovl,
+            fault_injector=injector, **ovl, overlap=overlap,
             seed=seed, tracer=tracer)
     else:
         engine = ServeEngine(cfg, capacity=capacity, cache_len=cache_len,
@@ -128,7 +129,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
                              policies=policies, kv_layout=kv_layout,
                              page_size=page_size, spec=spec, spec_k=spec_k,
                              prefix_share=prefix_share, evict=evict,
-                             fault_injector=injector, **ovl,
+                             fault_injector=injector, **ovl, overlap=overlap,
                              seed=seed, tracer=tracer)
     metrics = engine.run(reqs)
     out = metrics.summarize()
@@ -142,6 +143,7 @@ def serve(arch: str, *, smoke: bool = True, scale: str = "tiny",
         attr = phase_attribution(tracer)
         out["attribution"] = attr
         out["dominant_host_phase"] = dominant_host_phase(attr)
+        out["host_overlap_ratio"] = host_overlap_ratio(tracer)
         out["trace_out"] = trace_out
     return out
 
@@ -200,6 +202,12 @@ def main() -> None:
     ap.add_argument("--split-interval", type=int, default=4,
                     help="ticks between split-policy rebalance decisions "
                          "(disagg)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped tick pipeline: launch the decode/verify "
+                         "dispatch first, then run host-side prep (prefill "
+                         "assembly, drafting, COW planning, disagg handoff "
+                         "drain) while the device computes; token streams "
+                         "stay bit-identical to the synchronous loop")
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="fault-injection spec on the tick clock, e.g. "
                          "'crash@t=5', 'crash@t=5:prefill' (disagg pool), "
@@ -246,7 +254,8 @@ def main() -> None:
                 prefix_share=onoff(args.prefix_share),
                 evict=onoff(args.evict), disagg=args.disagg,
                 prefill_workers=args.prefill_workers,
-                split_interval=args.split_interval, chaos=args.chaos,
+                split_interval=args.split_interval, overlap=args.overlap,
+                chaos=args.chaos,
                 slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
                 tenant_rate=args.tenant_rate, queue_cap=args.queue_cap,
                 brownout=args.brownout,
@@ -295,9 +304,11 @@ def main() -> None:
               + (f", breaker {out['breaker_events']}"
                  if out.get("breaker_events") else ""))
     if "attribution" in out:
+        ratio = out.get("host_overlap_ratio")
         print(f"  trace written to {out['trace_out']}; tick-time "
               f"attribution (dominant host phase: "
-              f"{out['dominant_host_phase']}):")
+              f"{out['dominant_host_phase']}; host overlap ratio "
+              f"{'n/a' if ratio is None else f'{ratio:.2f}'}):")
         print(format_attribution(out["attribution"]))
 
 

@@ -22,7 +22,8 @@ The serving engine, cluster orchestrator, and benchmarks all thread a
 """
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, percentile
 from .report import (dominant_host_phase, format_attribution,
-                     overload_timeline, phase_attribution)
+                     host_overlap_ratio, overload_timeline,
+                     phase_attribution)
 from .slo import SLOTracker, meets_slo
 from .trace import (NOOP_SPAN, NULL_TRACER, ScopedTracer, TraceEvent, Tracer,
                     validate_chrome_trace)
@@ -30,7 +31,7 @@ from .trace import (NOOP_SPAN, NULL_TRACER, ScopedTracer, TraceEvent, Tracer,
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NOOP_SPAN",
     "NULL_TRACER", "SLOTracker", "ScopedTracer", "TraceEvent", "Tracer",
-    "dominant_host_phase", "format_attribution", "meets_slo",
-    "overload_timeline", "percentile", "phase_attribution",
+    "dominant_host_phase", "format_attribution", "host_overlap_ratio",
+    "meets_slo", "overload_timeline", "percentile", "phase_attribution",
     "validate_chrome_trace",
 ]

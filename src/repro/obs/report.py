@@ -12,6 +12,7 @@ time an overlapped tick loop should hide first.
 """
 from __future__ import annotations
 
+import bisect
 from typing import Dict, Iterable, List, Optional, Sequence
 
 from .metrics import percentile
@@ -20,16 +21,18 @@ from .trace import TraceEvent, Tracer
 
 def phase_attribution(tracer_or_events, *,
                       percentiles: Sequence[float] = (50, 95),
-                      exclude: Iterable[str] = ("tick",),
+                      exclude: Iterable[str] = ("tick", "overlap"),
                       ) -> Dict[str, Dict[str, Optional[float]]]:
     """Per-track timing breakdown from finished spans.
 
     Returns ``{track: {count, host_ms_total, host_ms_p50, ...,
     device_ms_total, device_ms_p50, ...}}``.  Root/envelope tracks that
-    merely contain the others (default: ``tick``) are excluded, and within
-    each (track, host/device) lane only the OUTERMOST spans are summed — a
-    detail span nested inside its phase envelope on the same track adds
-    trace-viewer depth without double-counting the phase's time."""
+    merely contain the others (default: ``tick``, and the overlapped
+    loop's ``overlap`` bind/prep envelopes, whose children carry their own
+    phase tracks) are excluded, and within each (track, host/device) lane
+    only the OUTERMOST spans are summed — a detail span nested inside its
+    phase envelope on the same track adds trace-viewer depth without
+    double-counting the phase's time."""
     events = (tracer_or_events.events
               if isinstance(tracer_or_events, Tracer) else tracer_or_events)
     skip = set(exclude)
@@ -60,6 +63,61 @@ def phase_attribution(tracer_or_events, *,
         rec["count"] = n
         out[track] = rec
     return out
+
+
+def host_overlap_ratio(tracer_or_events, *,
+                       exclude: Iterable[str] = ("tick", "overlap"),
+                       ) -> Optional[float]:
+    """Fraction of host span time that ran WHILE the device was busy — the
+    direct score of the overlapped engine loop (host ms hidden under device
+    ms / total host ms).
+
+    Device-busy wall time is the union of all ``cat="device"`` span
+    intervals across tracks.  The synchronous engine only emits
+    ``device_wait`` blocks, which by construction never coincide with host
+    spans on a single-threaded tick loop, so its ratio is ~0; the
+    overlapped engine additionally emits ``overlap.inflight`` envelopes
+    covering [dispatch, ready], so prep work inside the window counts as
+    hidden.  Host time uses the same outermost-per-track sweep as
+    `phase_attribution`; the ``overlap`` envelope track is excluded by
+    default because its children (prefill/draft/handoff spans) already
+    carry the phase identity.  Returns None when there is no host time."""
+    events = (tracer_or_events.events
+              if isinstance(tracer_or_events, Tracer) else tracer_or_events)
+    skip = set(exclude)
+    spans = sorted((e for e in events if e.ph == "X"),
+                   key=lambda e: (e.ts, -e.dur))
+    # merged device-busy intervals (device spans from ALL tracks)
+    dev: List[List[float]] = []
+    for e in spans:
+        if e.cat != "device" or e.track in skip:
+            continue
+        s, t = e.ts, e.ts + e.dur
+        if dev and s <= dev[-1][1]:
+            dev[-1][1] = max(dev[-1][1], t)
+        else:
+            dev.append([s, t])
+    starts = [iv[0] for iv in dev]
+
+    def hidden_in(s: float, t: float) -> float:
+        tot = 0.0
+        i = max(bisect.bisect_right(starts, s) - 1, 0)
+        while i < len(dev) and dev[i][0] < t:
+            tot += max(0.0, min(t, dev[i][1]) - max(s, dev[i][0]))
+            i += 1
+        return tot
+
+    open_end: Dict[str, float] = {}
+    total = hidden = 0.0
+    for e in spans:
+        if e.cat == "device" or e.track in skip:
+            continue
+        if e.ts < open_end.get(e.track, -1.0):
+            continue  # nested inside a host span already counted
+        open_end[e.track] = e.ts + e.dur
+        total += e.dur
+        hidden += hidden_in(e.ts, e.ts + e.dur)
+    return hidden / total if total > 0 else None
 
 
 def overload_timeline(tracer_or_events) -> Dict[str, object]:

@@ -143,6 +143,27 @@ class Tracer:
             cat="host", ts=self._clock() - self._epoch, depth=self._depth,
             args=args))
 
+    def clock(self) -> float:
+        """Raw tracer-clock reading; pair two of these with `complete()` to
+        record a span whose endpoints were observed out of line."""
+        return self._clock()
+
+    def complete(self, name: str, t0: float, t1: float, *,
+                 cat: str = "host", track: Optional[str] = None,
+                 **args) -> None:
+        """Record an already-finished span from explicit `clock()` readings.
+        The overlapped engine loop uses this to emit the device in-flight
+        envelope [dispatch, ready] after the fact — a live ``with`` span
+        cannot bracket it because the host is busy preparing the next tick
+        while the device computes."""
+        if not self.enabled:
+            return
+        self.events.append(TraceEvent(
+            name=name, ph="X",
+            track=track if track is not None else self.default_track(name),
+            cat=cat, ts=t0 - self._epoch, dur=max(t1 - t0, 0.0),
+            depth=self._depth, args=args))
+
     # --- metrics front (no-ops when disabled) -----------------------------
     def count(self, name: str, n=1) -> None:
         if self.enabled:
@@ -259,6 +280,15 @@ class ScopedTracer(Tracer):
             return
         base = track if track is not None else self.default_track(name)
         self.parent.instant(name, track=f"{self.scope}.{base}", **args)
+
+    def complete(self, name: str, t0: float, t1: float, *,
+                 cat: str = "host", track: Optional[str] = None,
+                 **args) -> None:
+        if not self.enabled:
+            return
+        base = track if track is not None else self.default_track(name)
+        Tracer.complete(self, name, t0, t1, cat=cat,
+                        track=f"{self.scope}.{base}", **args)
 
     def count(self, name: str, n=1) -> None:
         if self.enabled:

@@ -281,10 +281,12 @@ class DisaggEngine:
                  brownout: str = "off",
                  ladder: Optional[DegradationLadder] = None,
                  breaker: Optional[CircuitBreaker] = None,
+                 overlap: bool = False,
                  tracer: Optional[Tracer] = None):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.cfg = cfg
+        self.overlap = bool(overlap)
         self.cache_len = cache_len
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.split_policy = split_policy
@@ -340,7 +342,7 @@ class DisaggEngine:
             debug_checks=debug_checks, retry_backoff=retry_backoff,
             retry_jitter=retry_jitter, admission=admission,
             slo_ttft=slo_ttft, slo_tpot=slo_tpot, slo_window=slo_window,
-            tracer=scoped("prefill_pool"))
+            overlap=overlap, tracer=scoped("prefill_pool"))
         self.decode = ServeEngine(
             cfg, capacity=capacity, cache_len=cache_len,
             prefill_bucket=prefill_bucket, n_workers=kd,
@@ -361,7 +363,14 @@ class DisaggEngine:
             # breaker act where the levers live (spec, chunk width, parks)
             slo_ttft=slo_ttft, slo_tpot=slo_tpot, slo_window=slo_window,
             brownout=brownout, ladder=ladder, breaker=breaker,
-            tracer=scoped("decode_pool"))
+            overlap=overlap, tracer=scoped("decode_pool"))
+        if overlap:
+            # overlapped handoff transfer: while the decode pool's solver
+            # step is in flight, its prep window drains the prefill pool's
+            # finished slots (park gathers) into the handoff queue — the
+            # transfer cost hides behind decode compute instead of
+            # serializing between the two pools' ticks
+            self.decode.overlap_hook = self._drain_prefilled
 
         # the DISAGG engine owns the injector (the halves get none): pool
         # routing and handoff drops only make sense at this level
@@ -731,17 +740,39 @@ class DisaggEngine:
             dt = time.perf_counter() - t0
             self._ema_p = dt if self._ema_p == 0 else \
                 0.5 * self._ema_p + 0.5 * dt
-        self._drain_prefilled()
-        self._sweep_handoff(self._now())
-        self._inject_ready()
-        if d.scheduler.has_pending or d._by_slot or d._prefilling \
-                or d._retrying:
-            t0 = time.perf_counter()
-            with set_mesh(d.mesh):
-                d.tick()
-            dt = time.perf_counter() - t0
-            self._ema_d = dt if self._ema_d == 0 else \
-                0.5 * self._ema_d + 0.5 * dt
+        if self.overlap:
+            # overlapped order: inject LAST tick's drained payloads before
+            # the decode tick; THIS tick's finished prefills drain inside
+            # the decode tick's prep window (overlap_hook) while its solver
+            # step is in flight — they inject after, admitting one decode
+            # tick later than the synchronous order (timing-only; the
+            # inline drain below is the idempotent safety net for ticks
+            # where the decode half doesn't tick at all)
+            self._sweep_handoff(self._now())
+            self._inject_ready()
+            if d.scheduler.has_pending or d._by_slot or d._prefilling \
+                    or d._retrying:
+                t0 = time.perf_counter()
+                with set_mesh(d.mesh):
+                    d.tick()
+                dt = time.perf_counter() - t0
+                self._ema_d = dt if self._ema_d == 0 else \
+                    0.5 * self._ema_d + 0.5 * dt
+            self._drain_prefilled()
+            self._sweep_handoff(self._now())
+            self._inject_ready()
+        else:
+            self._drain_prefilled()
+            self._sweep_handoff(self._now())
+            self._inject_ready()
+            if d.scheduler.has_pending or d._by_slot or d._prefilling \
+                    or d._retrying:
+                t0 = time.perf_counter()
+                with set_mesh(d.mesh):
+                    d.tick()
+                dt = time.perf_counter() - t0
+                self._ema_d = dt if self._ema_d == 0 else \
+                    0.5 * self._ema_d + 0.5 * dt
         if self.debug_checks:
             self.check()
         trc = self.tracer

@@ -32,6 +32,17 @@ sequential greedy, up to k+1 tokens per dispatch.  Rejected tails roll back
 on the host (lengths/positions) and pages allocated solely for rejected
 drafts return to the free list.
 
+With ``overlap=True`` the tick pipeline is OVERLAPPED: the decode/verify
+dispatch for tick t launches first (late-binding restores join it), and
+while it is in flight on device the host runs everything else — fresh
+prefill dispatches, chunked-prefill chunk assembly, the disagg handoff
+hook, and the staging of tick t+1's block-table image — before blocking
+once for the result.  Every dispatch ships its scalar/metadata inputs
+(tokens, positions, block tables, lengths, COW pairs) as ONE packed int32
+transfer (`_MetaPacker`), unpacked device-side inside the jitted step.
+Token streams stay bit-identical to the synchronous path (the oracle):
+only the order of host work within a tick moves, never its values.
+
 Elasticity mirrors `launch.elastic.ElasticTrainer`: `resize(k)` rebuilds the
 mesh over the first min(k, n_devices) devices, re-shards params + the KV
 pool with `jax.device_put` (the chunk-transfer analogue for serving state),
@@ -98,6 +109,7 @@ class TickRecord:
     retries: int = 0  # victim requests re-queued for re-execution this tick
     shed: int = 0  # requests expired this tick (retry budget / deadline)
     brownout_level: int = 0  # degradation-ladder level this tick (0 = full)
+    meta_transfers: int = 0  # packed host->device metadata transfers
 
 
 @dataclasses.dataclass
@@ -188,6 +200,7 @@ class ServeMetrics:
             "serve.retries_total": "retries",
             "serve.shed_requests": "shed",
             "serve.crashes": "crashes",
+            "serve.meta_transfers": "meta_transfers",
         }
         for metric, field in per_tick.items():
             reg.counter(metric).inc(
@@ -250,6 +263,7 @@ class ServeMetrics:
             "admission_bytes_total": cnt("serve.admission_bytes"),
             "prefill_chunks_total": cnt("serve.prefill_chunks"),
             "prefill_dispatches_total": cnt("serve.prefill_dispatches"),
+            "meta_transfers_total": cnt("serve.meta_transfers"),
             # speculative decode: useful work per decode dispatch
             "decode_dispatches": int(dispatches),
             "draft_dispatches": int(draft_disp),
@@ -319,6 +333,40 @@ def _lru_get(cache: Dict, key, build: Callable[[], Any], cap: int,
     return cache[key]
 
 
+class _MetaPacker:
+    """Pinned-style host staging for per-dispatch metadata: every scalar /
+    small-array input of a dispatch (next tokens, positions, block tables,
+    lengths, COW pairs, chunk offsets, write ids) is copied into ONE
+    contiguous int32 staging buffer and shipped as ONE host->device
+    transfer; the jitted step slices its views back out device-side.
+    Buffers are persistent (the pinned-buffer idiom) and rotate through a
+    small ring so a buffer is never rewritten while an earlier async
+    dispatch's transfer could still reference it — a tick issues at most a
+    handful of packs (decode/verify + a few prefill groups)."""
+
+    RING = 8
+    __slots__ = ("_bufs", "_i")
+
+    def __init__(self):
+        self._bufs = [np.empty(256, np.int32) for _ in range(self.RING)]
+        self._i = 0
+
+    def pack(self, arrays) -> jnp.ndarray:
+        total = 0
+        for a in arrays:
+            total += a.size
+        self._i = (self._i + 1) % self.RING
+        buf = self._bufs[self._i]
+        if buf.size < total:
+            buf = self._bufs[self._i] = np.empty(next_pow2(total), np.int32)
+        off = 0
+        for a in arrays:
+            n = a.size
+            buf[off:off + n] = np.ravel(a)
+            off += n
+        return jnp.asarray(buf[:total])
+
+
 class ServeEngine:
     """Continuous-batching serving engine with Chicle-style elasticity."""
 
@@ -341,6 +389,7 @@ class ServeEngine:
                  draft_params: Optional[Any] = None,
                  debug_checks: bool = False,
                  decode_enabled: bool = True,
+                 overlap: bool = False,
                  fault_injector: Optional[FaultInjector] = None,
                  retry_backoff: int = 1,
                  retry_jitter: bool = True,
@@ -515,6 +564,19 @@ class ServeEngine:
                                    for v in jax.tree.leaves(self.blocks)))
         # host-side per-slot stream state
         self.next_tok = np.zeros((capacity, 1), np.int32)
+        # overlapped tick pipeline: launch the decode/verify dispatch first,
+        # do the rest of the tick's host work while it is in flight, block
+        # once at the end.  Streams stay bit-equal to the sync oracle.
+        self.overlap = bool(overlap)
+        # host work to run INSIDE the overlap window (the DisaggEngine
+        # hangs its handoff extraction here so park gathers from the
+        # prefill pool hide behind the decode pool's in-flight dispatch)
+        self.overlap_hook: Optional[Callable[[], Any]] = None
+        self._meta = _MetaPacker()
+        self._tick_meta = 0  # packed metadata transfers this tick
+        # block-table image staged in the previous tick's overlap window;
+        # consumed (or discarded on any page/membership change) at bind
+        self._plan: Optional[Dict[str, Any]] = None
         # rolling KV-stats snapshot: tick deltas are measured against the
         # PREVIOUS tick's end, so parks/restores driven between ticks (e.g.
         # a cluster lease shrink) still land in the next tick's record
@@ -590,14 +652,32 @@ class ServeEngine:
         rules = AxisRules(mesh)
         cfg = self.cfg
 
+        # the decode/verify steps take their scalar inputs as ONE packed
+        # int32 metadata vector (see `_MetaPacker`) and slice the views
+        # back out here, inside the trace — each layout's component widths
+        # are recoverable from the meta length (plus the static draft span
+        # Q for the paged verify, where (Q, table_width) would otherwise
+        # alias in the length)
+        cap = self.capacity
+
         if self.kv_layout == "paged":
             impl = self.paged_impl
             # without prefix sharing no page can ever reach refcount 2, so
             # the fused COW copy is dead work — trace it out entirely
             use_cow = self.prefix_share
 
-            def decode(params, blocks, tok, pos, table, lengths,
-                       cow_src, cow_dst):
+            def unpack(meta, q):
+                w = meta.shape[0] // cap - q - 4
+                tok = meta[:cap * q].reshape(cap, q)
+                pos = meta[cap * q: cap * (q + 1)]
+                table = meta[cap * (q + 1): cap * (q + 1 + w)].reshape(cap, w)
+                lengths = meta[cap * (q + 1 + w): cap * (q + 2 + w)]
+                cow_src = meta[cap * (q + 2 + w): cap * (q + 3 + w)]
+                cow_dst = meta[cap * (q + 3 + w):]
+                return tok, pos, table, lengths, cow_src, cow_dst
+
+            def decode(params, blocks, meta):
+                tok, pos, table, lengths, cow_src, cow_dst = unpack(meta, 1)
                 logits, new_cache = M.paged_decode_step(
                     cfg, params, {"blocks": blocks}, tok, pos, table,
                     lengths, rules=rules, impl=impl,
@@ -605,8 +685,8 @@ class ServeEngine:
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 return nxt, new_cache["blocks"]
 
-            def verify(params, blocks, tok, pos, table, lengths,
-                       cow_src, cow_dst):
+            def verify(params, blocks, meta, q):
+                tok, pos, table, lengths, cow_src, cow_dst = unpack(meta, q)
                 logits, new_cache = M.paged_verify_step(
                     cfg, params, {"blocks": blocks}, tok, pos, table,
                     lengths, rules=rules, impl=impl,
@@ -615,16 +695,23 @@ class ServeEngine:
                         new_cache["blocks"])
 
             return (mesh, rules, jax.jit(decode, donate_argnums=(1,)),
-                    jax.jit(verify, donate_argnums=(1,)))
+                    jax.jit(verify, donate_argnums=(1,),
+                            static_argnums=(3,)))
 
-        def decode(params, blocks, k_pos, tok, pos):
+        def decode(params, blocks, k_pos, meta):
+            tok = meta[:cap].reshape(cap, 1)
+            pos = meta[cap:]
             cache = {"blocks": blocks, "k_pos": k_pos}
             logits, new_cache = M.decode_step(cfg, params, cache, tok, pos,
                                               rules=rules)
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
             return nxt, new_cache["blocks"], new_cache["k_pos"]
 
-        def verify(params, blocks, k_pos, tok, pos, n_new):
+        def verify(params, blocks, k_pos, meta):
+            q = meta.shape[0] // cap - 2
+            tok = meta[:cap * q].reshape(cap, q)
+            pos = meta[cap * q: cap * (q + 1)]
+            n_new = meta[cap * (q + 1):]
             cache = {"blocks": blocks, "k_pos": k_pos}
             logits, new_cache = M.verify_step(cfg, params, cache, tok, pos,
                                               n_new, rules=rules)
@@ -792,7 +879,11 @@ class ServeEngine:
         cfg, rules, impl = self.cfg, self.rules, self.paged_impl
 
         def build():
-            def step(params, blocks, tokens, offset, chunk_end, table):
+            def step(params, blocks, tokens, meta):
+                nb = tokens.shape[0]
+                offset = meta[:nb]
+                chunk_end = meta[nb: 2 * nb]
+                table = meta[2 * nb:].reshape(nb, -1)
                 last, new_cache = M.paged_prefill_chunk(
                     cfg, params, {"blocks": blocks}, tokens, offset,
                     chunk_end, table, rules=rules, impl=impl)
@@ -803,6 +894,13 @@ class ServeEngine:
 
         return _lru_get(self._chunk_cache, (km, chunk, table_width, n),
                         build, self.max_cached_fns, self.tracer, "chunk")
+
+    def _pack_meta(self, *arrays) -> jnp.ndarray:
+        """ONE host->device transfer for a dispatch's scalar/metadata
+        inputs (counted per tick as `meta_transfers`); the jitted step
+        slices the components back out device-side."""
+        self._tick_meta += 1
+        return self._meta.pack(arrays)
 
     @property
     def _page_bytes(self) -> int:
@@ -942,7 +1040,7 @@ class ServeEngine:
                 rows[name] = np.concatenate([arr, pad], axis=1)
             self.blocks = self._restore_fn(nb)(
                 self.blocks, jnp.asarray(rows["k"]), jnp.asarray(rows["v"]),
-                jnp.asarray(ids))
+                self._pack_meta(ids))
             req.state = RequestState.DECODING
             self.next_tok[req.slot, 0] = seq.next_tok
             self.scheduler.pool.pos[req.slot] = seq.live_tokens
@@ -1182,14 +1280,20 @@ class ServeEngine:
         self.scheduler.pool.pos[req.slot] = req.prompt_len
         self._by_slot[req.slot] = req
 
-    def _do_prefill(self, admitted: Sequence[Request]) -> int:
+    def _do_prefill(self, admitted: Sequence[Request],
+                    defer: Optional[List] = None) -> int:
         """Prefill this tick's admissions, one batched forward per shared
         bucket length, and insert their KV into the pool.  PARKED requests
         restore their host-parked pages instead (no model forward at all);
         fresh paged admissions map their longest indexed prompt prefix onto
         existing physical pages and scatter only the rest.  Long prompts in
         paged+chunked mode defer to `_advance_prefills` instead.  Returns
-        modeled admission bytes written to the device KV pool."""
+        modeled admission bytes written to the device KV pool.
+
+        When `defer` is given (the overlapped tick's prep window) the
+        dispatches launch async and their settle + PREFILL->DECODING
+        transitions are pushed onto it as (handle, [(row, request), ...])
+        for `_settle_prefills` to finish after the window closes."""
         direct: List[Request] = []
         nbytes = 0
         for r in admitted:
@@ -1217,7 +1321,7 @@ class ServeEngine:
             if self.kv_layout == "paged":
                 with trc.span("prefill.dispatch", bucket=bucket, n=n):
                     nxt, rows_k, rows_v = self._prefill_fn(bucket)(
-                        self.params, jnp.asarray(toks), jnp.asarray(lens))
+                        self.params, jnp.asarray(toks), self._pack_meta(lens))
                 bpp = bucket // self.page_size
                 page_ids = np.zeros(n * bpp, np.int32)  # 0 -> null page
                 real = 0
@@ -1232,29 +1336,42 @@ class ServeEngine:
                         real += len(plan.table) - plan.shared_pages
                 with trc.span("prefill.insert", track="prefill"):
                     self.blocks = self._insert_fn(n, bucket)(
-                        self.blocks, rows_k, rows_v, jnp.asarray(page_ids))
+                        self.blocks, rows_k, rows_v,
+                        self._pack_meta(page_ids))
                 nbytes += real * self._page_bytes
             else:
                 with trc.span("prefill.dispatch", bucket=bucket, n=n):
                     nxt, blocks_rows, k_pos_rows = self._prefill_fn(bucket)(
-                        self.params, jnp.asarray(toks), jnp.asarray(lens))
+                        self.params, jnp.asarray(toks), self._pack_meta(lens))
                     self._insert([r.slot for r in group], blocks_rows,
                                  k_pos_rows)
                 nbytes += self._pool_bytes  # at[].set rebuilds the pool
-            with trc.span("device_wait", cat="device", track="prefill"):
-                nxt = np.asarray(jax.block_until_ready(nxt))
+            if defer is not None:
+                defer.append((nxt, list(enumerate(group))))
+                continue
+            # settle at prefill's OWN sync point (first token AND the
+            # insert scatter), so prefill device time lands on the prefill
+            # track instead of inside the next decode's device_wait
+            with trc.span("prefill.device_wait", cat="device",
+                          track="prefill"):
+                jax.block_until_ready((nxt, self.blocks))
+            nxt = np.asarray(nxt)
             now = self._now()
             for i, r in enumerate(group):
                 self._start_decoding(r, int(nxt[i]), now)
         return nbytes
 
-    def _advance_prefills(self) -> Tuple[int, int, int]:
+    def _advance_prefills(self, defer: Optional[List] = None
+                          ) -> Tuple[int, int, int]:
         """Advance every mid-prefill request by ONE page-aligned chunk (so
         prefill work interleaves with decode instead of monopolizing the
         tick).  Slots sharing a (chunk, table-width) bucket are BATCHED
         into one forward, padded to a power-of-two batch bucket (rows with
         chunk_end 0 are inert: their writes route to the null page) so the
         per-group retrace count stays bounded like the admission path's.
+        With `defer` (overlap prep window) the completing slots' settles
+        are pushed as (handle, [(row, request), ...]) for
+        `_settle_prefills` instead of blocking here.
         Returns (chunks processed, modeled KV bytes written, dispatches)."""
         nbytes = 0
         tok_bytes = self._page_bytes // self.page_size
@@ -1290,23 +1407,30 @@ class ServeEngine:
             with self.tracer.span("prefill.chunk", width=width, n=n):
                 nxt, self.blocks = self._chunk_fn(C, width, nb)(
                     self.params, self.blocks, jnp.asarray(toks),
-                    jnp.asarray(offs), jnp.asarray(ends), jnp.asarray(tbl))
+                    self._pack_meta(offs, ends, tbl))
             n_chunks += n
             n_dispatch += 1
             nxt_np: Optional[np.ndarray] = None
+            done_group: List[Tuple[int, Request]] = []
             for i, (slot, req, off, end) in enumerate(group):
                 # index the pages this chunk just WROTE (never ahead of the
                 # writes, so a sharer can only ever map written pages)
                 self.mem.register_prefix(slot, req.prompt, upto=end)
                 if end >= req.prompt_len:
-                    if nxt_np is None:
-                        with self.tracer.span("device_wait", cat="device",
-                                              track="prefill"):
-                            nxt_np = np.asarray(jax.block_until_ready(nxt))
                     finished.append(slot)
+                    if defer is not None:
+                        done_group.append((i, req))
+                        continue
+                    if nxt_np is None:
+                        with self.tracer.span("prefill.device_wait",
+                                              cat="device", track="prefill"):
+                            jax.block_until_ready((nxt, self.blocks))
+                        nxt_np = np.asarray(nxt)
                     self._start_decoding(req, int(nxt_np[i]), self._now())
                 else:
                     self._prefilling[slot] = (req, end)
+            if done_group:
+                defer.append((nxt, done_group))
         for slot in finished:
             del self._prefilling[slot]
         return n_chunks, nbytes, n_dispatch
@@ -1392,22 +1516,37 @@ class ServeEngine:
                 self.pages.ensure(slot, int(pos[slot]) + int(n_new[slot]))
             width = self._page_bucket(
                 max(self.pages.n_pages_of(s) for s in active))
-            table = self.pages.table_array(self.capacity, width, only=active)
+            # reuse the block table staged by last tick's overlap window iff
+            # NOTHING moved since: the allocator's version counter bumps on
+            # every table mutation (ensure/trim/cow/share/free), so a stale
+            # plan — even one with identical page COUNTS but different ids —
+            # can never be bound
+            staged = self._plan
+            self._plan = None
+            if (staged is not None
+                    and staged["version"] == self.pages.version
+                    and staged["width"] == width
+                    and staged["slots"] == active):
+                table = staged["table"]
+            else:
+                table = self.pages.table_array(self.capacity, width,
+                                               only=active)
             lengths = np.zeros(self.capacity, np.int32)
             for slot in active:
                 lengths[slot] = pos[slot] + n_new[slot]
             return table, lengths, cow_src, cow_dst
 
-    def _spec_decode(self, active: List[int], verify_fn
-                     ) -> Tuple[int, float, int, int, int]:
-        """One speculative solver phase: propose up to `spec_k` drafts per
-        active slot, score all k+1 positions in ONE (B, Q) verify dispatch,
-        emit the longest matching draft prefix plus the model's own token at
-        the first mismatch (bit-identical to sequential greedy), and roll
-        back per-slot state for the rejected tail (lengths stay host-side;
-        pages allocated solely for rejected drafts are trimmed back to the
-        free list).  Returns (tokens emitted, step seconds, drafted,
-        accepted, drafter device dispatches)."""
+    def _spec_launch(self, active: List[int], verify_fn
+                     ) -> Callable[[], Tuple[int, float, int, int, int]]:
+        """Launch one speculative solver phase and return its SETTLE
+        closure: propose up to `spec_k` drafts per active slot, dispatch
+        ONE (B, Q) verify over all k+1 positions (async — it is in flight
+        when this returns), and defer the block + greedy-prefix emit +
+        rejected-tail rollback to the closure.  The synchronous tick calls
+        the closure immediately; the overlapped tick runs its prep window
+        in between.  The closure returns (tokens emitted, step seconds,
+        drafted, accepted, drafter device dispatches) and is bit-identical
+        to sequential greedy either way."""
         k = self.spec_k
         Q = k + 1
         sched = self.scheduler
@@ -1440,51 +1579,107 @@ class ServeEngine:
                     toks[slot, 1: 1 + len(d)] = d
                 n_new[slot] = 1 + len(d)
 
-        if self.kv_layout == "paged":
-            table, lengths, cow_src, cow_dst = self._paged_batch_inputs(
-                active, n_new)
-
-            def launch():
+        with self.tracer.span("verify.dispatch", n=len(active)):
+            if self.kv_layout == "paged":
+                table, lengths, cow_src, cow_dst = self._paged_batch_inputs(
+                    active, n_new)
                 vtok, self.blocks = verify_fn(
-                    self.params, self.blocks, jnp.asarray(toks),
-                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(table),
-                    jnp.asarray(lengths), jnp.asarray(cow_src),
-                    jnp.asarray(cow_dst))
-                return vtok
-        else:
-            def launch():
+                    self.params, self.blocks,
+                    self._pack_meta(toks, np.asarray(pos_np, np.int32),
+                                    table, lengths, cow_src, cow_dst), Q)
+            else:
                 vtok, self.blocks, self.k_pos = verify_fn(
-                    self.params, self.blocks, self.k_pos, jnp.asarray(toks),
-                    jnp.asarray(pos_np, jnp.int32), jnp.asarray(n_new))
-                return vtok
-        vtok, t_step = self._timed_step(launch, label="verify.dispatch",
-                                        t0=t0)
+                    self.params, self.blocks, self.k_pos,
+                    self._pack_meta(toks, np.asarray(pos_np, np.int32),
+                                    n_new))
 
-        now = self._now()
-        emitted = drafted = accepted = 0
-        with self.tracer.span("rollback", n=len(active)):
+        def settle() -> Tuple[int, float, int, int, int]:
+            # blocking on the token output is blocking on the whole verify
+            # computation (KV scatter included: same XLA executable) — and
+            # unlike the blocks handle, vtok is never donated to a prefill
+            # dispatched inside the overlap window
+            with self.tracer.span("device_wait", cat="device",
+                                  track="verify"):
+                jax.block_until_ready(vtok)
+            vtok_np = np.asarray(vtok)
+            t_step = time.perf_counter() - t0
+            sched.end_iteration()
+            now = self._now()
+            emitted = drafted = accepted = 0
+            with self.tracer.span("rollback", n=len(active)):
+                for slot in active:
+                    req = self._by_slot[slot]
+                    d = drafts[slot]
+                    m = greedy_accept(d, vtok_np[slot])
+                    drafted += len(d)
+                    accepted += m
+                    for j in range(m + 1):
+                        tok = int(vtok_np[slot, j])
+                        req.generated.append(tok)
+                        self.next_tok[slot, 0] = tok
+                        sched.pool.pos[slot] += 1
+                        emitted += 1
+                        if req.done():
+                            break
+                    if req.done():
+                        del self._by_slot[slot]
+                        self._release(req, now)
+                    elif self.mem is not None:
+                        # rollback: pages allocated solely for rejected
+                        # drafts
+                        self.mem.trim(slot, int(sched.pool.pos[slot]))
+            return (emitted, t_step, drafted, accepted,
+                    getattr(self.drafter, "dispatches_per_propose", 0))
+
+        return settle
+
+    def _decode_launch(self, active: List[int], decode_fn
+                       ) -> Callable[[], Tuple[int, float, int, int, int]]:
+        """Launch one plain greedy decode step and return its settle
+        closure (the non-spec sibling of `_spec_launch`): COW/table
+        planning + ONE packed metadata transfer + async dispatch here; the
+        closure blocks, emits, and releases finished requests."""
+        sched = self.scheduler
+        pos_np = sched.pool.pos
+        # t0 BEFORE the COW/table planning so decode_s keeps its
+        # historical meaning (plan + dispatch + device completion)
+        t0 = time.perf_counter()
+        with self.tracer.span("decode.dispatch", n=len(active)):
+            if self.kv_layout == "paged":
+                table, lengths, cow_src, cow_dst = self._paged_batch_inputs(
+                    active, np.ones(self.capacity, np.int32))
+                nxt, self.blocks = decode_fn(
+                    self.params, self.blocks,
+                    self._pack_meta(self.next_tok,
+                                    np.asarray(pos_np, np.int32),
+                                    table, lengths, cow_src, cow_dst))
+            else:
+                nxt, self.blocks, self.k_pos = decode_fn(
+                    self.params, self.blocks, self.k_pos,
+                    self._pack_meta(self.next_tok,
+                                    np.asarray(pos_np, np.int32)))
+
+        def settle() -> Tuple[int, float, int, int, int]:
+            with self.tracer.span("device_wait", cat="device",
+                                  track="decode"):
+                jax.block_until_ready(nxt)
+            nxt_np = np.asarray(nxt)
+            t_step = time.perf_counter() - t0
+            sched.end_iteration()
+            now = self._now()
+            emitted = 0
             for slot in active:
                 req = self._by_slot[slot]
-                d = drafts[slot]
-                m = greedy_accept(d, vtok[slot])
-                drafted += len(d)
-                accepted += m
-                for j in range(m + 1):
-                    tok = int(vtok[slot, j])
-                    req.generated.append(tok)
-                    self.next_tok[slot, 0] = tok
-                    sched.pool.pos[slot] += 1
-                    emitted += 1
-                    if req.done():
-                        break
+                req.generated.append(int(nxt_np[slot]))
+                self.next_tok[slot, 0] = int(nxt_np[slot])
+                sched.pool.pos[slot] += 1
+                emitted += 1
                 if req.done():
                     del self._by_slot[slot]
                     self._release(req, now)
-                elif self.mem is not None:
-                    # rollback: pages allocated solely for rejected drafts
-                    self.mem.trim(slot, int(sched.pool.pos[slot]))
-        return (emitted, t_step, drafted, accepted,
-                getattr(self.drafter, "dispatches_per_propose", 0))
+            return emitted, t_step, 0, 0, 0
+
+        return settle
 
     def _finish_at_capacity(self) -> None:
         """A slot whose next write position is past the cache can't store
@@ -1497,29 +1692,131 @@ class ServeEngine:
             for slot in full:
                 self._release(self._by_slot.pop(slot), now)
 
-    def _timed_step(self, launch: Callable[[], Any], *, label: str,
-                    t0: Optional[float] = None) -> Tuple[np.ndarray, float]:
-        """One solver-phase step, shared by the plain-decode and spec-verify
-        paths: run the jitted dispatch (async) under a `label` span, then
-        block on BOTH the token output and the updated KV pool under a
-        ``device_wait`` span before stamping the step time.  Per-tick decode
-        timings (and the tokens/s and decode-p50 numbers derived from them)
-        therefore measure completed device work rather than XLA enqueue, and
-        the wait is attributed as device time on `label`'s track instead of
-        being blamed on whichever host phase touches the arrays next.
-        Closes the scheduler iteration."""
-        if t0 is None:
-            t0 = time.perf_counter()
-        with self.tracer.span(label):
-            out = launch()
-        with self.tracer.span("device_wait", cat="device",
-                              track=Tracer.default_track(label)):
-            # k_pos is None in the paged layout: an empty pytree, ignored
-            jax.block_until_ready((out, self.blocks, self.k_pos))
-        toks = np.asarray(out)
-        t_step = time.perf_counter() - t0
-        self.scheduler.end_iteration()
-        return toks, t_step
+    def _settle_prefills(self, pending: List) -> None:
+        """Finish the prefill dispatches the overlap window deferred: ONE
+        block covering every outstanding first-token handle plus the KV
+        pool's latest handle, then the PREFILL -> DECODING transitions in
+        dispatch order (same order the synchronous path runs them)."""
+        if not pending:
+            return
+        with self.tracer.span("prefill.device_wait", cat="device",
+                              track="prefill"):
+            jax.block_until_ready(([h for h, _ in pending], self.blocks))
+        now = self._now()
+        for handle, group in pending:
+            nxt_np = np.asarray(handle)
+            for i, req in group:
+                self._start_decoding(req, int(nxt_np[i]), now)
+
+    def _prep_next_plan(self) -> None:
+        """Stage next tick's decode block table inside the overlap window.
+        The stage is only a HINT: `_paged_batch_inputs` binds it iff the
+        allocator's version counter, the width bucket, and the active-slot
+        list all still match at bind time — any admission, trim, COW break,
+        or crash in between simply voids it (rebuild, never patch)."""
+        self._plan = None
+        if self.pages is None or not self.decode_enabled:
+            return
+        slots = sorted(self._by_slot)
+        if not slots:
+            return
+        width = self._page_bucket(
+            max(self.pages.n_pages_of(s) for s in slots))
+        self._plan = {
+            "version": self.pages.version,
+            "width": width,
+            "slots": slots,
+            "table": self.pages.table_array(self.capacity, width,
+                                            only=slots),
+        }
+
+    def _overlapped_phase(self, admitted: Sequence[Request], now: float
+                          ) -> Tuple[int, int, int, int, float, int, int,
+                                     int]:
+        """The overlapped tick's middle: launch this tick's solver step
+        FIRST (async), then do the host-side prep — fresh-admission
+        prefills, chunked-prefill advancement, the disagg drain hook, and
+        next tick's block-table plan — while the device computes.  Restores
+        of parked/crash-retried slots bind BEFORE the launch so they join
+        this tick's decode exactly like the synchronous path.  Emits the
+        same streams as the synchronous tick: the reordering is
+        timing-only (greedy decode conditions only on settled tokens, and
+        every prep mutation the launch could observe happens at bind).
+        Returns (admission_bytes, n_chunks, n_chunk_dispatch, emitted,
+        t_step, drafted, accepted, draft_disp)."""
+        trc = self.tracer
+        sched = self.scheduler
+        restores: List[Request] = []
+        fresh: List[Request] = []
+        for r in admitted:
+            if self.mem is not None and self.mem.has_parked(r.rid):
+                restores.append(r)
+            else:
+                fresh.append(r)
+        admission_bytes = 0
+        # late binding: parked restores (disagg handoffs, crash retries)
+        # re-enter the decode batch THIS tick, so they go through before
+        # the launch snapshot
+        for r in restores:
+            admission_bytes += self._restore_slot(r)
+        self._finish_at_capacity()
+
+        emitted = 0
+        t_step = 0.0
+        drafted = accepted = draft_disp = 0
+        settle = None
+        launch_t = 0.0
+        active = sorted(self._by_slot) if self.decode_enabled else []
+        if active:
+            sched.begin_iteration()
+            _, _, decode_fn, verify_fn = self._k_cache[self._k_mesh(self.k)]
+            with trc.span("overlap.bind", track="overlap", n=len(active)):
+                if self.drafter is not None:
+                    settle = self._spec_launch(active, verify_fn)
+                else:
+                    settle = self._decode_launch(active, decode_fn)
+            launch_t = trc.clock() if trc.enabled else 0.0
+
+        pending: List = []
+        with trc.span("overlap.prep", track="overlap", n_fresh=len(fresh)):
+            if fresh:
+                admission_bytes += self._do_prefill(fresh, defer=pending)
+            n_chunks = n_chunk_dispatch = 0
+            if self._prefilling:
+                n_chunks, chunk_bytes, n_chunk_dispatch = \
+                    self._advance_prefills(defer=pending)
+                admission_bytes += chunk_bytes
+            if self.overlap_hook is not None:
+                # disagg: drain the OTHER pool's finished prefills into the
+                # handoff queue while this pool's decode is in flight
+                self.overlap_hook()
+            self._prep_next_plan()
+
+        if settle is not None:
+            (emitted, t_step, drafted, accepted, draft_disp) = settle()
+            if trc.enabled:
+                # after-the-fact device envelope covering [dispatch, ready]
+                # so attribution (and host_overlap_ratio) can see the prep
+                # window's host spans as hidden behind device compute; it
+                # lands on the solver's track (the `overlap` track is
+                # excluded from the device-busy union by design)
+                trc.complete("overlap.inflight", launch_t, trc.clock(),
+                             cat="device",
+                             track=("verify" if self.drafter is not None
+                                    else "decode"), n=len(active))
+        else:
+            sched.sim_time += 1.0  # idle ticks still advance schedule time
+        self._settle_prefills(pending)
+        if settle is None and not pending and (fresh or n_chunks
+                                               or restores):
+            # prefill-only tick with nothing deferred (e.g. all chunked
+            # admissions, or restore-only): settle the outstanding KV
+            # scatters so wall-clock metrics charge the issuing tick
+            with trc.span("prefill.device_wait", cat="device",
+                          track="prefill"):
+                jax.block_until_ready(self.blocks)
+        return (admission_bytes, n_chunks, n_chunk_dispatch, emitted,
+                t_step, drafted, accepted, draft_disp)
 
     def tick(self) -> TickRecord:
         if self.suspended:
@@ -1530,6 +1827,7 @@ class ServeEngine:
         kv0 = self._kv_prev
         trc = self.tracer
         tick_t0 = time.perf_counter() if trc.enabled else 0.0
+        self._tick_meta = 0  # packed host->device transfers this tick
 
         # ---- fault phase: injected faults land BEFORE the scheduler so a
         # crash on the same tick as a scale event has a fixed, replayable
@@ -1608,74 +1906,52 @@ class ServeEngine:
                 now, preempt=self._preempt_for if (self.mem is not None
                                                    and self.evict) else None,
                 limit=limit, allow=allow)
-        admission_bytes = self._do_prefill(admitted) if admitted else 0
-        n_chunks = 0
-        n_chunk_dispatch = 0
-        if self._prefilling:
-            n_chunks, chunk_bytes, n_chunk_dispatch = self._advance_prefills()
-            admission_bytes += chunk_bytes
-        self._finish_at_capacity()
-
-        # ---- solver phase: one pool-wide decode (or spec-verify) step ----
-        emitted = 0
-        t_step = 0.0
-        drafted = accepted = draft_disp = 0
-        # a prefill-only pool half never decodes: prefilled slots wait in
-        # _by_slot for the disagg handoff (the else-branch below still
-        # advances schedule time and settles the prefill scatters)
-        active = sorted(self._by_slot) if self.decode_enabled else []
-        if active:
-            sched.begin_iteration()
-            _, _, decode_fn, verify_fn = self._k_cache[self._k_mesh(self.k)]
-            if self.drafter is not None:
-                (emitted, t_step, drafted, accepted,
-                 draft_disp) = self._spec_decode(active, verify_fn)
-            else:
-                pos_np = sched.pool.pos
-                # t0 BEFORE the COW/table planning so decode_s keeps its
-                # historical meaning (plan + dispatch + device completion)
-                t0 = time.perf_counter()
-                if self.kv_layout == "paged":
-                    table, lengths, cow_src, cow_dst = \
-                        self._paged_batch_inputs(
-                            active, np.ones(self.capacity, np.int32))
-
-                    def launch():
-                        nxt, self.blocks = decode_fn(
-                            self.params, self.blocks,
-                            jnp.asarray(self.next_tok),
-                            jnp.asarray(pos_np, jnp.int32),
-                            jnp.asarray(table), jnp.asarray(lengths),
-                            jnp.asarray(cow_src), jnp.asarray(cow_dst))
-                        return nxt
-                else:
-                    def launch():
-                        nxt, self.blocks, self.k_pos = decode_fn(
-                            self.params, self.blocks, self.k_pos,
-                            jnp.asarray(self.next_tok),
-                            jnp.asarray(pos_np, jnp.int32))
-                        return nxt
-                nxt, t_step = self._timed_step(
-                    launch, label="decode.dispatch", t0=t0)
-
-                now = self._now()
-                for slot in active:
-                    req = self._by_slot[slot]
-                    req.generated.append(int(nxt[slot]))
-                    self.next_tok[slot, 0] = int(nxt[slot])
-                    sched.pool.pos[slot] += 1
-                    emitted += 1
-                    if req.done():
-                        del self._by_slot[slot]
-                        self._release(req, now)
+        if self.overlap:
+            # ---- overlapped middle: launch the solver step first, prep
+            # next tick's work while the device computes ----
+            (admission_bytes, n_chunks, n_chunk_dispatch, emitted, t_step,
+             drafted, accepted, draft_disp) = self._overlapped_phase(
+                admitted, now)
         else:
-            sched.sim_time += 1.0  # idle ticks still advance schedule time
-            if admitted or n_chunks:
-                # prefill-only tick: settle the outstanding KV scatters so
-                # wall-clock metrics charge the work to the tick that
-                # issued it (the decode path settles via _timed_step)
-                with trc.span("device_wait", cat="device", track="prefill"):
-                    jax.block_until_ready(self.blocks)
+            admission_bytes = self._do_prefill(admitted) if admitted else 0
+            n_chunks = 0
+            n_chunk_dispatch = 0
+            if self._prefilling:
+                n_chunks, chunk_bytes, n_chunk_dispatch = \
+                    self._advance_prefills()
+                admission_bytes += chunk_bytes
+            self._finish_at_capacity()
+
+            # ---- solver phase: one pool-wide decode (or spec-verify)
+            # step ----
+            emitted = 0
+            t_step = 0.0
+            drafted = accepted = draft_disp = 0
+            # a prefill-only pool half never decodes: prefilled slots wait
+            # in _by_slot for the disagg handoff (the else-branch below
+            # still advances schedule time and settles the prefill
+            # scatters)
+            active = sorted(self._by_slot) if self.decode_enabled else []
+            if active:
+                sched.begin_iteration()
+                _, _, decode_fn, verify_fn = \
+                    self._k_cache[self._k_mesh(self.k)]
+                if self.drafter is not None:
+                    settle = self._spec_launch(active, verify_fn)
+                else:
+                    settle = self._decode_launch(active, decode_fn)
+                # synchronous path: settle immediately — the launch/settle
+                # split only reorders work when overlap=True
+                (emitted, t_step, drafted, accepted, draft_disp) = settle()
+            else:
+                sched.sim_time += 1.0  # idle ticks still advance time
+                if admitted or n_chunks:
+                    # prefill-only tick: settle the outstanding KV
+                    # scatters so wall-clock metrics charge the work to
+                    # the tick that issued it
+                    with trc.span("prefill.device_wait", cat="device",
+                                  track="prefill"):
+                        jax.block_until_ready(self.blocks)
 
         if self.debug_checks:
             # page-leak guard: every live slot must hold EXACTLY the pages
@@ -1740,6 +2016,7 @@ class ServeEngine:
                          shed=self._tick_faults["shed"],
                          brownout_level=(self.ladder.level
                                          if self.ladder is not None else 0),
+                         meta_transfers=self._tick_meta,
                          **kv)
         self._tick_faults = {"crashes": 0, "retries": 0, "shed": 0}
         self.metrics.ticks.append(rec)
@@ -1747,7 +2024,7 @@ class ServeEngine:
             trc.count("serve.ticks")
             trc.count("serve.tokens_emitted", emitted)
             trc.observe("serve.tick_s", time.perf_counter() - tick_t0)
-            if active:
+            if t_step > 0.0:
                 trc.observe("serve.decode_s", t_step)
         self._tick += 1
         return rec

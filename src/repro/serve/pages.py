@@ -63,6 +63,10 @@ class PageAllocator:
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}  # slot -> ordered page ids
         self._ref: Dict[int, int] = {}  # page -> number of tables holding it
+        # bumped on every table mutation: a block-table image staged ahead
+        # of time (the overlapped engine's double-buffered plan) is valid
+        # only while this counter is unchanged
+        self.version = 0
 
     # --- capacity math ----------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -74,6 +78,7 @@ class PageAllocator:
         if slot in self._tables:
             raise PageError(f"slot {slot} already has a block table")
         self._tables[slot] = []
+        self.version += 1
         return self.ensure(slot, n_tokens)
 
     def ensure(self, slot: int, n_tokens: int) -> List[int]:
@@ -91,6 +96,8 @@ class PageAllocator:
             table.append(pg)
             self._ref[pg] = 1
             added.append(pg)
+        if added:
+            self.version += 1
         return added
 
     def share(self, slot: int, pages: Sequence[int]) -> None:
@@ -108,6 +115,7 @@ class PageAllocator:
                 raise PageError(f"page {pg} already in slot {slot}'s table")
             table.append(pg)
             self._ref[pg] += 1
+            self.version += 1
 
     def _decref(self, pg: int) -> bool:
         """Drop one reference; returns True when the page was freed."""
@@ -127,6 +135,7 @@ class PageAllocator:
         if slot not in self._tables:
             raise PageError(f"free of slot {slot} with no block table")
         pages = self._tables.pop(slot)
+        self.version += 1
         # push in reverse so the lowest ids are handed out again first, but
         # report freed pages in table order
         return [pg for pg in reversed(pages) if self._decref(pg)][::-1]
@@ -144,6 +153,8 @@ class PageAllocator:
         keep = self.pages_for(n_tokens)
         dropped = table[keep:]
         del table[keep:]
+        if dropped:
+            self.version += 1
         return [pg for pg in reversed(dropped) if self._decref(pg)][::-1]
 
     def cow(self, slot: int, index: int) -> Tuple[int, int]:
@@ -169,6 +180,7 @@ class PageAllocator:
         table[index] = new
         self._ref[new] = 1
         self._ref[old] -= 1
+        self.version += 1
         return old, new
 
     # --- queries ----------------------------------------------------------
@@ -259,6 +271,7 @@ class PageAllocator:
         self._ref = {new_id[p]: c for p, c in self._ref.items()}
         n_used = self.n_used
         self._free = list(range(self.n_pages - 1, n_used, -1))
+        self.version += 1
         return src
 
     # --- invariants -------------------------------------------------------

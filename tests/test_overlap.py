@@ -1,0 +1,210 @@
+"""Overlapped tick pipeline tests: the `overlap=True` engine loop must be
+a pure TIMING optimization — every configuration (flat/paged, spec on/off,
+chunked prefill, disagg, mid-run resize, crash recovery) streams tokens
+bit-identical to the synchronous loop, which stays in the codebase as the
+oracle.  Plus: the packed-metadata transfer counter, the overlap trace
+spans / host_overlap_ratio plumbing, and a no-deadlock drain guard."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import ElasticScalingPolicy, ScaleEvent
+from repro.faults import FaultInjector, FaultPlan, worker_crash
+from repro.obs import Tracer, host_overlap_ratio, validate_chrome_trace
+from repro.serve import DisaggEngine, ServeEngine, synthetic_requests
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_variant(get_config("smollm-360m"))
+
+
+def _burst(cfg, n=8, seed=0, prompt=(6, 16), max_new=(5, 9), **kw):
+    return synthetic_requests(n, vocab_size=cfg.vocab_size,
+                              arrivals=np.zeros(n), prompt_len=prompt,
+                              max_new_tokens=max_new,
+                              rng=np.random.default_rng(seed), **kw)
+
+
+def _trickle(cfg, n=8, seed=0, **kw):
+    """Staggered arrivals so admissions land while decodes are in flight —
+    the case the overlap window actually reorders."""
+    return synthetic_requests(n, vocab_size=cfg.vocab_size,
+                              arrivals=np.linspace(0.0, 0.02, n),
+                              prompt_len=(6, 16), max_new_tokens=(5, 9),
+                              rng=np.random.default_rng(seed), **kw)
+
+
+def _streams(metrics):
+    return {r.rid: tuple(r.generated) for r in metrics.requests}
+
+
+KW = dict(capacity=4, cache_len=32, prefill_bucket=8, seed=0)
+
+
+def _pair(cfg, make_reqs, engine_cls=ServeEngine, **kw):
+    """Run the identical workload synchronously and overlapped; return the
+    two stream maps (and the overlapped metrics for extra assertions)."""
+    sync = engine_cls(cfg, overlap=False, **kw).run(make_reqs())
+    eng = engine_cls(cfg, overlap=True, **kw)
+    ovl = eng.run(make_reqs())
+    return _streams(sync), _streams(ovl), ovl
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity matrix vs the synchronous oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["flat", "paged"])
+@pytest.mark.parametrize("spec", ["off", "ngram"])
+def test_overlap_bit_identical_layout_spec_matrix(cfg, layout, spec):
+    want, got, m = _pair(cfg, lambda: _burst(cfg), kv_layout=layout,
+                         spec=spec, debug_checks=(layout == "paged"), **KW)
+    assert got == want
+    assert sum(t.meta_transfers for t in m.ticks) > 0
+
+
+def test_overlap_bit_identical_staggered_arrivals(cfg):
+    """Admissions arriving mid-run join the prep window (deferred prefill
+    settles) without changing any stream."""
+    want, got, _ = _pair(cfg, lambda: _trickle(cfg, n=10),
+                         kv_layout="paged", debug_checks=True, **KW)
+    assert got == want
+
+
+def test_overlap_bit_identical_chunked_prefill(cfg):
+    kw = dict(capacity=4, cache_len=96, prefill_bucket=8, prefill_chunk=8,
+              seed=0)
+    want, got, m = _pair(
+        cfg, lambda: _burst(cfg, n=4, prompt=(40, 60), max_new=(3, 5)),
+        kv_layout="paged", debug_checks=True, **kw)
+    assert got == want
+    assert sum(t.prefill_chunks for t in m.ticks) > 0  # path exercised
+
+
+def test_overlap_bit_identical_mid_run_resize(cfg):
+    def make(overlap):
+        pol = ElasticScalingPolicy([ScaleEvent(0, 2), ScaleEvent(3, 3),
+                                    ScaleEvent(6, 2)])
+        return ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                           policies=[pol], overlap=overlap,
+                           debug_checks=True, **KW)
+
+    want = _streams(make(False).run(_burst(cfg)))
+    eng = make(True)
+    m = eng.run(_burst(cfg))
+    assert _streams(m) == want
+    assert len(m.scale_events) >= 2  # the resizes actually happened
+
+
+def test_overlap_bit_identical_crash_recovery(cfg):
+    """A mid-run worker crash voids staged plans and re-runs victims
+    bit-equal — the staged-table version guard under fire."""
+    def run(overlap):
+        inj = FaultInjector(FaultPlan([worker_crash(3)]))
+        eng = ServeEngine(cfg, kv_layout="paged", n_workers=2,
+                          fault_injector=inj, overlap=overlap,
+                          debug_checks=True, **KW)
+        return eng.run(_burst(cfg))
+
+    want = _streams(run(False))
+    m = run(True)
+    assert _streams(m) == want
+    assert m.summarize()["crashes_total"] == 1
+
+
+def test_overlap_bit_identical_disagg(cfg):
+    want, got, m = _pair(cfg, lambda: _burst(cfg), engine_cls=DisaggEngine,
+                         n_workers=2, debug_checks=True, **KW)
+    assert got == want
+    assert m.handoffs == len(want)  # every request crossed exactly once
+
+
+def test_overlap_bit_identical_disagg_spec_chunked(cfg):
+    kw = dict(capacity=4, cache_len=96, prefill_bucket=8, prefill_chunk=8,
+              spec="ngram", n_workers=2, seed=0)
+    want, got, _ = _pair(
+        cfg, lambda: _burst(cfg, n=4, prompt=(40, 60), max_new=(3, 5)),
+        engine_cls=DisaggEngine, debug_checks=True, **kw)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# No deadlock / full drain
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_drains_within_bounded_ticks(cfg):
+    """The overlapped loop (and its deferred settles / handoff drain hook)
+    must fully drain a full-pipeline workload in bounded ticks — a settle
+    left pending or a handoff stuck between pools would hang or fail
+    here."""
+    eng = DisaggEngine(cfg, n_workers=2, overlap=True, spec="ngram",
+                       debug_checks=True, capacity=4, cache_len=96,
+                       prefill_bucket=8, prefill_chunk=8, seed=0)
+    m = eng.run(_burst(cfg, n=6, prompt=(10, 50), max_new=(4, 8)),
+                max_ticks=400)
+    assert eng.drained
+    assert all(len(r.generated) == r.max_new_tokens for r in m.requests)
+
+
+# ---------------------------------------------------------------------------
+# Metadata-transfer batching
+# ---------------------------------------------------------------------------
+
+
+def test_meta_transfers_counted_and_bounded(cfg):
+    """Steady-state paged decode moves exactly ONE packed metadata array
+    per dispatch; the per-tick count lands in the metrics registry."""
+    eng = ServeEngine(cfg, kv_layout="paged", **KW)
+    m = eng.run(_burst(cfg, n=4))
+    per_tick = [t.meta_transfers for t in m.ticks]
+    assert sum(per_tick) > 0
+    # decode-only ticks (no admissions, no chunks) pack exactly one
+    solo = [t for t in m.ticks
+            if t.admitted == 0 and t.prefill_chunks == 0
+            and t.tokens_emitted > 0]
+    assert solo and all(t.meta_transfers == 1 for t in solo)
+    assert m.summarize()["meta_transfers_total"] == sum(per_tick)
+
+
+# ---------------------------------------------------------------------------
+# Tracing: overlap spans + host_overlap_ratio
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_trace_spans_and_ratio(cfg, tmp_path):
+    trc = Tracer(name="overlap-test")
+    eng = ServeEngine(cfg, kv_layout="paged", overlap=True, tracer=trc,
+                      **KW)
+    eng.run(_trickle(cfg, n=8))
+    names = {e.name for e in trc.events if e.ph == "X"}
+    assert {"overlap.bind", "overlap.prep", "overlap.inflight",
+            "prefill.device_wait"} <= names
+    obj = trc.to_chrome()
+    validate_chrome_trace(obj, require_names=["overlap.prep",
+                                              "overlap.bind"])
+    ratio = host_overlap_ratio(trc)
+    assert ratio is not None and 0.0 <= ratio <= 1.0
+
+    # the synchronous loop never overlaps: no inflight envelopes, and a
+    # (near-)zero ratio — the contrast host_overlap_ratio exists to show
+    trc2 = Tracer(name="sync-test")
+    ServeEngine(cfg, kv_layout="paged", overlap=False, tracer=trc2,
+                **KW).run(_trickle(cfg, n=8))
+    assert "overlap.inflight" not in {e.name for e in trc2.events}
+
+
+def test_prefill_has_own_settle_span(cfg):
+    """Prefill dispatches settle under their own `prefill.device_wait`
+    span (on the prefill track) in BOTH modes — no generic tick-end wait
+    absorbing prefill scatter time."""
+    for overlap in (False, True):
+        trc = Tracer(name="prefill-settle")
+        ServeEngine(cfg, kv_layout="paged", overlap=overlap, tracer=trc,
+                    **KW).run(_burst(cfg, n=4))
+        spans = [e for e in trc.events
+                 if e.ph == "X" and e.name == "prefill.device_wait"]
+        assert spans and all(e.cat == "device" and e.track == "prefill"
+                             for e in spans)
